@@ -1,0 +1,1 @@
+# One benchmark per paper table/figure (see DESIGN.md §6 for the index).

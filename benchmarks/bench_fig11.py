@@ -1,0 +1,68 @@
+"""Fig. 11: synopsis storage, total storage with compression, query latency,
+and construction time on the scaled-up datasets.
+
+Paper claims to validate: sub-MB synopses; total storage reduction 3.2–4.3x
+with GD; sub-ms median query latency; construction in seconds–minutes and
+1.2–4x faster when seeded with GD bases.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.aqp.datasets import load, scale_up
+from repro.aqp.engine import AQPFramework
+from repro.aqp.queries import AGGS_FULL, generate_queries
+from repro.core.types import BuildParams
+
+
+def run(rows: list, quick: bool = False):
+    out = {}
+    for name in ("power", "flights"):
+        base = load(name, n=75_000 if quick else 150_000)
+        table = scale_up(base, 2 if quick else 8, seed=9)
+        queries = generate_queries(table, 30 if quick else 80, seed=31,
+                                   aggs=AGGS_FULL, max_preds=5,
+                                   min_selectivity=1e-5)
+        # With compression (bases seed bin edges) vs without.
+        fw = AQPFramework(BuildParams(n_samples=100_000),
+                          use_compression=True).ingest(table)
+        fw_nc = AQPFramework(BuildParams(n_samples=100_000),
+                             use_compression=False).ingest(table)
+        lats = []
+        for sql in queries:
+            t0 = time.perf_counter()
+            fw.query(sql)
+            lats.append(time.perf_counter() - t0)
+        rep = fw.storage_report()
+        entry = {
+            "synopsis_bytes": rep["synopsis"]["total"],
+            "compressed_data_bytes": rep["compressed_data_bytes"],
+            "raw_data_bytes": rep["raw_data_bytes"],
+            "total_storage_reduction": rep["total_storage_reduction"],
+            "median_latency_ms": float(np.median(lats) * 1e3),
+            "p99_latency_ms": float(np.percentile(lats, 99) * 1e3),
+            "build_with_gd_s": fw.timings["build_synopsis_s"],
+            "compress_s": fw.timings["compress_s"],
+            "build_without_gd_s": fw_nc.timings["build_synopsis_s"],
+        }
+        out[name] = entry
+        emit(rows, f"fig11/{name}/latency",
+             entry["median_latency_ms"] * 1e3, "median query")
+        emit(rows, f"fig11/{name}/synopsis_size", None,
+             f"{entry['synopsis_bytes']}B")
+        emit(rows, f"fig11/{name}/total_storage_reduction", None,
+             f"{entry['total_storage_reduction']:.2f}x")
+        emit(rows, f"fig11/{name}/build_time", None,
+             f"{entry['build_with_gd_s']:.1f}s(gd)/"
+             f"{entry['build_without_gd_s']:.1f}s(raw)")
+    save_json("fig11", out)
+    return out
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    print("\n".join(rows))

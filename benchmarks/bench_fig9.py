@@ -1,0 +1,56 @@
+"""Fig. 9: parameter sensitivity — N_s, M (via m_frac) and alpha.
+
+Paper claims to validate: N_s dominates accuracy/size/build-time; alpha has
+near-zero impact; lower M -> more bins -> better accuracy, bigger synopsis.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, eval_engine, save_json
+from repro.aqp.datasets import load
+from repro.aqp.engine import AQPFramework
+from repro.aqp.exact import ExactEngine
+from repro.aqp.queries import AGGS_INITIAL, generate_queries
+from repro.core.types import BuildParams
+
+GRID = {
+    "n_samples": (10_000, 50_000, 100_000),
+    "m_frac": (0.005, 0.01, 0.02),
+    "alpha": (0.01, 0.001, 0.0001),
+}
+BASE = dict(n_samples=50_000, m_frac=0.01, alpha=0.001)
+
+
+def run(rows: list, quick: bool = False):
+    table = load("flights", n=150_000)
+    exact = ExactEngine(table)
+    queries = generate_queries(table, 25 if quick else 50, seed=41,
+                               aggs=AGGS_INITIAL, max_preds=3,
+                               min_selectivity=1e-4)
+    out = {}
+    for knob, values in GRID.items():
+        if quick and knob != "n_samples":
+            continue
+        for val in values:
+            kw = dict(BASE)
+            kw[knob] = val
+            t0 = time.perf_counter()
+            fw = AQPFramework(BuildParams(**kw)).ingest(table)
+            build_s = time.perf_counter() - t0
+            res = eval_engine(fw.query, queries, exact)
+            res.pop("errs")
+            res["build_s"] = build_s
+            res["size_bytes"] = fw.size_bytes()
+            out[f"{knob}={val}"] = res
+            emit(rows, f"fig9/{knob}={val}", None,
+                 f"err={res['median_err']:.3f}%/size={res['size_bytes']}B"
+                 f"/build={build_s:.1f}s")
+    save_json("fig9", out)
+    return out
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    print("\n".join(rows))

@@ -1,0 +1,98 @@
+"""Kernel micro-benchmarks + the fused-query-path latency comparison.
+
+On this CPU container, Pallas runs in interpret mode (correctness only), so
+wall-times compare the *paper-faithful per-predicate path* against the
+*fused single-launch path* executed via the jnp reference of the same fused
+kernel — the structural win (ops per query) that the Pallas kernel locks in
+on TPU.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.aqp.datasets import load
+from repro.aqp.engine import AQPFramework
+from repro.core.fastpath import make_fastpath
+from repro.core.query import QueryEngine
+from repro.core.types import BuildParams
+from repro.kernels.hist2d import hist2d
+from repro.kernels.hist2d.ref import hist2d_ref
+from repro.kernels.weightings import fused_weightings
+from repro.kernels.weightings.ref import fused_weightings_ref
+
+
+def _time(fn, n=5):
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+    return (time.perf_counter() - t0) / n
+
+
+def run(rows: list, quick: bool = False):
+    rng = np.random.default_rng(0)
+    out = {}
+
+    # hist2d: jnp scatter-add ref timing (compiled) at construction scale.
+    n, ki, kj = 100_000, 256, 256
+    bi = rng.integers(0, ki, n).astype(np.int32)
+    bj = rng.integers(0, kj, n).astype(np.int32)
+    w = np.ones(n, np.float32)
+    import jax.numpy as jnp
+    import jax
+    ref = jax.jit(lambda a, b, c: hist2d_ref(a, b, c, ki, kj))
+    t_ref = _time(lambda: ref(jnp.asarray(bi), jnp.asarray(bj), jnp.asarray(w)))
+    ok = bool(jnp.allclose(hist2d(bi, bj, w, ki, kj),
+                           ref(jnp.asarray(bi), jnp.asarray(bj),
+                               jnp.asarray(w))))
+    out["hist2d"] = {"n": n, "ref_us": t_ref * 1e6, "pallas_matches_ref": ok}
+    emit(rows, "kernels/hist2d_ref", t_ref * 1e6, f"match={ok}")
+
+    # fused weightings kernel vs ref.
+    el, k2, k1 = 5, 256, 256
+    H = rng.random((el, k2, k2)).astype(np.float32)
+    beta = rng.random((el, k2)).astype(np.float32)
+    hx = H.sum(2) + 1.0
+    fold = np.zeros((el, k1, k2), np.float32)
+    fold[:, np.arange(k1), np.sort(rng.integers(0, k2, k1))] = 1
+    refw = jax.jit(fused_weightings_ref)
+    t_refw = _time(lambda: refw(jnp.asarray(H), jnp.asarray(beta),
+                                jnp.asarray(fold), jnp.asarray(hx)))
+    okw = bool(jnp.allclose(
+        fused_weightings(H, beta, fold, hx),
+        refw(jnp.asarray(H), jnp.asarray(beta), jnp.asarray(fold),
+             jnp.asarray(hx)), rtol=1e-5, atol=1e-5))
+    out["fused_weightings"] = {"ref_us": t_refw * 1e6,
+                               "pallas_matches_ref": okw}
+    emit(rows, "kernels/fused_weightings_ref", t_refw * 1e6, f"match={okw}")
+
+    # End-to-end query latency: per-predicate NumPy path vs fused path.
+    table = load("power", n=100_000)
+    fw = AQPFramework(BuildParams(n_samples=50_000)).ingest(table)
+    sql = ("SELECT AVG(global_active_power) FROM t WHERE voltage > 238 AND "
+           "global_intensity < 9 AND sub_metering_3 >= 1")
+    eng_ref = QueryEngine(fw.synopsis)
+    eng_fast = QueryEngine(fw.synopsis,
+                           fastpath=make_fastpath(use_pallas=False))
+    t_per_pred = _time(lambda: eng_ref.query(sql), n=20)
+    t_fused = _time(lambda: eng_fast.query(sql), n=20)
+    agree = np.allclose(eng_ref.query(sql).as_tuple(),
+                        eng_fast.query(sql).as_tuple(), rtol=1e-5)
+    out["query_path"] = {"per_predicate_us": t_per_pred * 1e6,
+                         "fused_us": t_fused * 1e6, "agree": bool(agree)}
+    emit(rows, "kernels/query_per_predicate", t_per_pred * 1e6, "baseline")
+    emit(rows, "kernels/query_fused", t_fused * 1e6,
+         f"{t_per_pred / t_fused:.2f}x vs baseline, agree={agree}")
+    save_json("kernels", out)
+    return out
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    print("\n".join(rows))

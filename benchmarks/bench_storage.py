@@ -1,0 +1,39 @@
+"""§4.3 storage encoding: encoded size vs the Eq. 12 bound + codec
+round-trip integrity + Golomb sparse-vs-dense selection stats."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.aqp.datasets import load
+from repro.aqp.engine import AQPFramework
+from repro.core import storage
+from repro.core.types import BuildParams
+
+
+def run(rows: list, quick: bool = False):
+    out = {}
+    for name in ("power", "taxi") if not quick else ("power",):
+        table = load(name, n=100_000)
+        fw = AQPFramework(BuildParams(n_samples=50_000)).ingest(table)
+        rep = storage.synopsis_size_report(fw.synopsis)
+        blob = storage.encode(fw.synopsis)
+        ph2 = storage.decode(blob)
+        roundtrip = all(
+            np.allclose(h1.h, h2.h) and np.allclose(h1.edges, h2.edges)
+            for h1, h2 in zip(fw.synopsis.hists, ph2.hists))
+        rep["roundtrip_ok"] = roundtrip
+        rep["ratio_vs_eq12"] = rep["total"] / max(rep["eq12_bound"], 1)
+        out[name] = rep
+        emit(rows, f"storage/{name}/encoded", None, f"{rep['total']}B")
+        emit(rows, f"storage/{name}/vs_eq12_bound", None,
+             f"{rep['ratio_vs_eq12']:.2f}x")
+        emit(rows, f"storage/{name}/roundtrip", None, str(roundtrip))
+    save_json("storage", out)
+    return out
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    print("\n".join(rows))

@@ -1,0 +1,53 @@
+"""Shared benchmark utilities: engine sweeps, metric collection, reporting."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_json(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as fh:
+        json.dump(payload, fh, indent=1, default=float)
+
+
+def emit(rows: list, name: str, us_per_call, derived):
+    """Append one CSV row in the harness's required format."""
+    us = "" if us_per_call is None else f"{us_per_call:.1f}"
+    rows.append(f"{name},{us},{derived}")
+
+
+def eval_engine(query_fn, queries, exact_engine):
+    """Run queries through an engine; returns error list, latency list,
+    bounds-correctness list, bound widths."""
+    from repro.aqp.queries import relative_error
+    errs, lats, bok, widths = [], [], [], []
+    for sql in queries:
+        exact = exact_engine.query(sql)
+        t0 = time.perf_counter()
+        out = query_fn(sql)
+        lats.append(time.perf_counter() - t0)
+        if isinstance(out, tuple):
+            est, lo, hi = out
+        else:
+            est, lo, hi = out.estimate, out.lower, out.upper
+        errs.append(relative_error(est, exact))
+        if lo is not None and hi is not None and exact is not None:
+            bok.append(lo - 1e-9 <= exact <= hi + 1e-9)
+            if exact != 0:
+                widths.append(abs(hi - lo) / abs(exact) * 100.0)
+    return {
+        "median_err": float(np.median(errs)) if errs else None,
+        "mean_err": float(np.mean(errs)) if errs else None,
+        "p90_err": float(np.percentile(errs, 90)) if errs else None,
+        "errs": errs,
+        "median_latency_ms": float(np.median(lats) * 1e3),
+        "bounds_correct_pct": (float(np.mean(bok) * 100.0) if bok else None),
+        "median_bound_width_pct": (float(np.median(widths)) if widths else None),
+        "n_queries": len(queries),
+    }

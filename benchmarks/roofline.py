@@ -1,0 +1,202 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh:
+
+    compute term    = HLO_FLOPs / (chips * 197e12)      bf16 peak, v5e
+    memory term     = HLO_bytes / (chips * 819e9)       HBM BW
+    collective term = wire_bytes / (chips * 50e9)       ICI per-link
+
+``cost_analysis``/HLO text report *per-partition* numbers, so per-device
+values divide by the per-chip rates directly (equivalent to the global
+formula). Costs come from the *unrolled* pass (XLA counts while bodies once
+— measured; see dryrun.py); memory comes from the scan pass (the deployable
+program). MODEL_FLOPS uses 6*N*D (train) / 2*N*D (inference) with N_active
+for MoE.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # TPU v5e bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+
+
+def _params_of(arch: str):
+    """(N_total, N_active) parameter counts from the config, analytically."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    d = cfg.d_model
+    emb = cfg.vocab * d
+    total = emb + d  # embed + final norm
+    active = total
+    groups = cfg.layer_groups()
+    for pat, n_rep in groups:
+        for kind in pat:
+            if kind.startswith("attn") or kind.startswith("moe"):
+                attn = d * (cfg.n_heads + 2 * cfg.n_kv) * cfg.head_dim \
+                    + cfg.n_heads * cfg.head_dim * d
+                total += n_rep * (attn + 2 * d)
+                active += n_rep * (attn + 2 * d)
+                if kind.startswith("moe"):
+                    router = d * cfg.n_experts
+                    expert = 3 * d * cfg.d_ff_expert
+                    shared = 3 * d * cfg.d_ff_expert * cfg.n_shared
+                    total += n_rep * (router + cfg.n_experts * expert + shared)
+                    active += n_rep * (router + cfg.top_k * expert + shared)
+                else:
+                    total += n_rep * 3 * d * cfg.d_ff
+                    active += n_rep * 3 * d * cfg.d_ff
+            elif kind == "ssm":
+                din = cfg.ssm_expand * d
+                nh = din // cfg.ssm_head_dim
+                n_p = d * (2 * din + 2 * cfg.ssm_state + nh) + din * d + d
+                total += n_rep * n_p
+                active += n_rep * n_p
+            elif kind == "rec":
+                w = cfg.rnn_width
+                n_p = 2 * d * w + 2 * w * w + w * d + 3 * d * cfg.d_ff + 2 * d
+                total += n_rep * n_p
+                active += n_rep * n_p
+    return total, active
+
+
+def load_cell(arch: str, shape: str, mesh: str) -> dict | None:
+    names = (arch,
+             arch.replace("-", "_").replace("0.6", "0_6").replace("1.3", "1_3"),
+             arch.replace("_", "-"))
+    for name in names:
+        path = os.path.join(RESULTS_DIR, f"{name}__{shape}__{mesh}.json")
+        if os.path.exists(path):
+            with open(path) as fh:
+                return json.load(fh)
+    return None
+
+
+def analyze(arch: str, shape: str) -> dict | None:
+    scan = load_cell(arch, shape, "single_pod")
+    cost_rec = load_cell(arch, shape, "single_pod_cost")
+    if scan is None or scan.get("skipped"):
+        return {"arch": arch, "shape": shape,
+                "skipped": scan.get("reason") if scan else "missing"}
+    cost_src = cost_rec if cost_rec and cost_rec.get("ok") else scan
+    cost = cost_src.get("cost_analysis", {})
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    coll = cost_src.get("collectives", {})
+    wire_dev = sum(v.get("wire_bytes_per_device", 0.0) for v in coll.values())
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = wire_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    frac = t_compute / bound if bound > 0 else 0.0
+
+    n_total, n_active = _params_of(arch)
+    toks = SHAPE_TOKENS[shape]
+    mult = 6 if shape == "train_4k" else 2
+    model_flops = mult * n_active * toks
+    n_dev = scan.get("n_devices", 256)
+    hlo_total = flops_dev * n_dev
+    useful = model_flops / hlo_total if hlo_total else 0.0
+
+    mem = scan.get("memory_analysis", {})
+    return {
+        "arch": arch, "shape": shape, "n_devices": n_dev,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "wire_bytes_per_device": wire_dev,
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": frac,     # compute / dominant (1.0 = compute-bound)
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "n_params_total": n_total, "n_params_active": n_active,
+        "temp_bytes_per_device": mem.get("temp_size_in_bytes"),
+        "arg_bytes_per_device": mem.get("argument_size_in_bytes"),
+        "collectives": coll,
+        "cost_source": ("u1u2-extrapolated" if cost_src is cost_rec
+                        else "scan(body-once)"),
+    }
+
+
+_SUGGEST = {
+    "compute": "compute-bound: raise MXU utilization (fuse elementwise into "
+               "matmuls, bf16 everywhere, drop redundant remat recompute)",
+    "memory": "HBM-bound: cut activation traffic (wider fusion, smaller "
+              "remat residuals, bf16 logits / chunked cross-entropy)",
+    "collective": "ICI-bound: reshard to remove all-gathers (bf16-cast "
+                  "before FSDP gather, sequence-shard boundary, larger "
+                  "per-device batch)",
+}
+
+
+def markdown_table(shapes=None, archs=None) -> str:
+    from repro.configs import ARCHS
+    from repro.launch import specs as S
+    shapes = shapes or list(S.SHAPES)
+    archs = archs or list(ARCHS)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "roofline frac | useful-FLOP ratio | next move |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in archs:
+        for shape in shapes:
+            r = analyze(arch.replace("_", "-").replace("-0-6b", "-0.6b")
+                        .replace("-1-3b", "-1.3b"), shape)
+            if r is None:
+                continue
+            if "skipped" in r:
+                lines.append(f"| {r['arch']} | {shape} | — | — | — | skipped |"
+                             f" — | — | {r['skipped'][:48]} |")
+                continue
+            lines.append(
+                f"| {r['arch']} | {shape} | {r['compute_s']:.4f} | "
+                f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+                f"{r['useful_flops_ratio']:.2f} | "
+                f"{_SUGGEST[r['dominant']][:64]} |")
+    return "\n".join(lines)
+
+
+def run(rows: list, quick: bool = False):
+    from benchmarks.common import emit, save_json
+    from repro.configs import ARCHS
+    from repro.launch import specs as S
+    out = {}
+    for arch_us in ARCHS:
+        arch = arch_us.replace("_", "-").replace("-0-6b", "-0.6b") \
+            .replace("-1-3b", "-1.3b")
+        for shape in S.SHAPES:
+            r = analyze(arch, shape)
+            if r is None:
+                continue
+            out[f"{arch}/{shape}"] = r
+            if "skipped" in r:
+                emit(rows, f"roofline/{arch}/{shape}", None, "skipped")
+            else:
+                emit(rows, f"roofline/{arch}/{shape}", None,
+                     f"dom={r['dominant']}/frac={r['roofline_fraction']:.2f}"
+                     f"/useful={r['useful_flops_ratio']:.2f}")
+    save_json("roofline", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown_table())

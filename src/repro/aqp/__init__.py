@@ -1,0 +1,4 @@
+# End-to-end AQP framework (Fig. 2): ingestion -> GreedyGD -> PairwiseHist ->
+# query execution; plus ground truth, baselines, datasets and query generation.
+from repro.aqp.engine import AQPFramework  # noqa: F401
+from repro.aqp.exact import ExactEngine  # noqa: F401

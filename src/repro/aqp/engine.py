@@ -1,0 +1,107 @@
+"""The end-to-end AQP framework of Fig. 2.
+
+    raw table --preprocess--> integer domain --GreedyGD--> bases+deviations
+                                   |                           |
+                                   |                     (seed bin edges)
+                                   v                           v
+                            PairwiseHist  <--- BuildPairwiseHist(sample)
+                                   |
+        SQL --parse/encode--> QueryEngine --> (estimate, lower, upper)
+
+Data lives compressed (CompressedTable); the synopsis answers queries without
+touching it. ``append_rows`` supports incremental ingestion (compressed store
+updated immediately; synopsis marked stale and rebuilt lazily) — the paper's
+"more frequent updates" story.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.build import build_pairwise_hist
+from repro.core.query import QueryEngine, QueryResult
+from repro.core.types import BuildParams
+from repro.core import storage as storagemod
+from repro.gd.greedygd import GreedyGD
+from repro.gd.preprocess import preprocess_table
+
+
+class AQPFramework:
+    def __init__(self, params: BuildParams | None = None,
+                 use_compression: bool = True, fastpath=None):
+        self.params = params or BuildParams()
+        self.use_compression = use_compression
+        self.fastpath = fastpath
+        self.gd = GreedyGD()
+        self.compressed = None
+        self.preprocessed = None
+        self.synopsis = None
+        self.engine = None
+        self._raw_batches = []
+        self.timings = {}
+
+    # -------------------------------------------------------------- ingest
+
+    def ingest(self, table: dict) -> "AQPFramework":
+        t0 = time.perf_counter()
+        self.preprocessed = preprocess_table(table)
+        t1 = time.perf_counter()
+        seed_edges = None
+        if self.use_compression:
+            self.compressed = self.gd.compress(self.preprocessed.data)
+            seed_edges = GreedyGD.seed_edges(self.compressed)
+        t2 = time.perf_counter()
+        self.synopsis = build_pairwise_hist(
+            self.preprocessed.data, self.preprocessed.columns, self.params,
+            seed_edges=seed_edges)
+        t3 = time.perf_counter()
+        self.engine = QueryEngine(self.synopsis, fastpath=self.fastpath)
+        self.timings = {"preprocess_s": t1 - t0, "compress_s": t2 - t1,
+                        "build_synopsis_s": t3 - t2}
+        return self
+
+    def append_rows(self, table: dict):
+        """Incremental ingestion: recompress the union (GD supports appends;
+        dictionary growth forces re-coding here), mark synopsis stale."""
+        self._raw_batches.append(table)
+        self.synopsis = None
+        self.engine = None
+
+    def _ensure_fresh(self):
+        if self.engine is None:
+            raise RuntimeError(
+                "synopsis is stale after append_rows; call rebuild() first")
+
+    def rebuild(self, base_table: dict):
+        merged = dict(base_table)
+        for batch in self._raw_batches:
+            for k in merged:
+                merged[k] = np.concatenate([np.asarray(merged[k]),
+                                            np.asarray(batch[k])])
+        self._raw_batches = []
+        return self.ingest(merged)
+
+    # -------------------------------------------------------------- queries
+
+    def query(self, sql_text: str) -> QueryResult:
+        self._ensure_fresh()
+        return self.engine.query(sql_text)
+
+    # -------------------------------------------------------------- reports
+
+    def storage_report(self) -> dict:
+        rep = {"synopsis": storagemod.synopsis_size_report(self.synopsis)}
+        if self.compressed is not None:
+            rep["compressed_data_bytes"] = self.compressed.size_bytes()
+            rep["raw_data_bytes"] = self.compressed.raw_size_bytes()
+            rep["compression_ratio"] = (self.compressed.raw_size_bytes()
+                                        / max(self.compressed.size_bytes(), 1))
+            rep["total_with_synopsis"] = (rep["compressed_data_bytes"]
+                                          + rep["synopsis"]["total"])
+            rep["total_storage_reduction"] = (rep["raw_data_bytes"]
+                                              / max(rep["total_with_synopsis"], 1))
+        return rep
+
+    def size_bytes(self) -> int:
+        return storagemod.synopsis_size_report(self.synopsis)["total"]

@@ -1,0 +1,29 @@
+# The paper's primary contribution: the PairwiseHist synopsis and its query
+# engine, implemented as composable JAX modules (lax control flow, vmap over
+# histograms, pjit-shardable construction).
+#
+# AQP operates on integer/float64 data domains (post-GD preprocessing values
+# can exceed float32's 2^24 integer range), so x64 is enabled at import here.
+# The LM stack (repro.models/train/serve/launch) never imports repro.core and
+# always uses explicit dtypes, so this flag does not affect it.
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.types import (  # noqa: E402,F401
+    Hist1D,
+    PairHist,
+    PairwiseHist,
+    BuildParams,
+)
+from repro.core.build import build_pairwise_hist  # noqa: E402,F401
+
+# QueryEngine / parse_sql are imported lazily to keep partial builds usable.
+def __getattr__(name):  # noqa: D105
+    if name == "QueryEngine":
+        from repro.core.query import QueryEngine
+        return QueryEngine
+    if name == "parse_sql":
+        from repro.core.sql import parse_sql
+        return parse_sql
+    raise AttributeError(name)

@@ -1,0 +1,262 @@
+"""BuildPairwiseHist (Algorithm 1), level-synchronous TPU adaptation.
+
+Pipeline:
+  1. downsample the (pre-processed, integer-domain) dataset to N_s rows;
+  2. per column: sort once, prefix-unique once, then `refine_1d` (vmapped
+     across all columns — one kernel refines every column's histogram);
+  3. per column pair: `refine_2d` + `pair_metadata` (host loop re-using one
+     compiled function; all pairs share shapes).
+
+Missing values (NaN) are excluded per-histogram: a row missing column i does
+not contribute to hist(i) nor to any pair involving i — matching SQL
+semantics (aggregates ignore NULL, comparisons with NULL are false).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chi2 as chi2lib
+from repro.core import refine
+from repro.core.types import BuildParams, ColumnInfo, Hist1D, PairHist, PairwiseHist
+
+
+def _prep_column(col_vals: np.ndarray):
+    """Sort one column with NaN (missing) pushed to +inf at the tail.
+
+    Returns (sorted values, unique-prefix array, n_valid, vmin, vmax).
+    """
+    x = np.asarray(col_vals, np.float64).copy()
+    nan = np.isnan(x)
+    x[nan] = np.inf
+    xs = np.sort(x)
+    n_valid = int(x.size - nan.sum())
+    new = np.empty(x.size, bool)
+    new[0] = True
+    new[1:] = xs[1:] != xs[:-1]
+    uprefix = np.concatenate([[0], np.cumsum(new)]).astype(np.int64)
+    if n_valid == 0:
+        return xs, uprefix, 0, 0.0, 0.0
+    return xs, uprefix, n_valid, float(xs[0]), float(xs[n_valid - 1])
+
+
+def fold_to_rows(edges_1d: np.ndarray, edges_pair: np.ndarray) -> np.ndarray:
+    """Map each 1-D (union-grid) bin to the pair row containing it.
+
+    Pair edges are a subset of the union grid, so containment is exact.
+    """
+    k1 = edges_1d.size - 1
+    mids = 0.5 * (edges_1d[:-1] + edges_1d[1:])
+    idx = np.searchsorted(edges_pair, mids, side="right") - 1
+    return np.clip(idx, 0, max(edges_pair.size - 2, 0)).astype(np.int32)
+
+
+def _init_edges(vmin: float, vmax: float, cap: int, n_take: int,
+                seed_edges=None) -> tuple[np.ndarray, int]:
+    """Initial bin edges: GD bases (downsampled to ceil(N_s/M)) or min/max."""
+    if seed_edges is not None and len(seed_edges) > 2:
+        e = np.unique(np.asarray(seed_edges, np.float64))
+        e = e[(e > vmin) & (e < vmax)]
+        if e.size > max(n_take - 2, 0):
+            idx = np.linspace(0, e.size - 1, max(n_take - 2, 0)).round().astype(int)
+            e = e[np.unique(idx)] if idx.size else e[:0]
+        edges = np.concatenate([[vmin], e, [vmax]])
+    else:
+        edges = np.array([vmin, vmax], np.float64)
+    edges = np.unique(edges)
+    if edges.size == 1:  # constant column: single zero-width bin
+        edges = np.array([edges[0], edges[0]], np.float64)
+    edges = edges[: cap + 1]
+    n_bins = edges.size - 1
+    out = np.full(cap + 1, np.inf, np.float64)
+    out[: edges.size] = edges
+    return out, n_bins
+
+
+def build_pairwise_hist(
+    data: np.ndarray,
+    columns: list[ColumnInfo],
+    params: BuildParams | None = None,
+    n_rows_full: int | None = None,
+    seed_edges: list | None = None,
+) -> PairwiseHist:
+    """Construct the synopsis from a pre-processed (N, d) float64 matrix.
+
+    ``data`` is in the *pre-processed* (GD) domain: non-negative integers as
+    f64, NaN for missing. ``seed_edges`` (optional) are per-column initial
+    edge candidates — typically reconstructed GreedyGD bases (§3).
+    ``n_rows_full`` is N of the complete dataset when ``data`` is itself
+    already a sample of something larger (IDEBench-style scale-up).
+    """
+    params = params or BuildParams()
+    data = np.asarray(data, np.float64)
+    n_total = int(data.shape[0]) if n_rows_full is None else int(n_rows_full)
+    d = data.shape[1]
+    if len(columns) != d:
+        raise ValueError("columns metadata must match data width")
+
+    # --- 1. sample ---------------------------------------------------------
+    n_s = min(params.n_samples, data.shape[0])
+    if n_s < data.shape[0]:
+        rng = np.random.default_rng(params.seed)
+        rows = rng.choice(data.shape[0], size=n_s, replace=False)
+        sample = data[rows]
+    else:
+        sample = data
+    m_pts = max(2, int(round(params.m_frac * n_s)))
+    n_take = max(2, math.ceil(n_s / m_pts))
+    s_max = max(params.s1_max, params.s2_max)
+    crit_np = chi2lib.build_crit_table(params.alpha, s_max)
+    crit = jnp.asarray(crit_np)
+    crit1 = crit[: params.s1_max + 1]
+    crit2 = crit[: params.s2_max + 1]
+
+    # --- 2. one-dimensional histograms (vmapped across columns) ------------
+    K1 = params.k1_cap
+    xs_all = np.empty((d, n_s), np.float64)
+    up_all = np.empty((d, n_s + 1), np.int64)
+    e0_all = np.empty((d, K1 + 1), np.float64)
+    n0_all = np.empty((d,), np.int32)
+    mu_all = np.array([c.mu for c in columns], np.float64)
+    for i in range(d):
+        xs, up, n_valid, vmin, vmax = _prep_column(sample[:, i])
+        xs_all[i], up_all[i] = xs, up
+        seed = None if seed_edges is None else seed_edges[i]
+        if columns[i].kind == "categorical" and \
+                0 < len(columns[i].categories) <= max(n_take, 4):
+            # One bin per category: categorical codes with near-equal
+            # frequencies look "uniform" to the chi-squared test and would
+            # otherwise never split, destroying groupwise discrimination.
+            # (GD-bases seeding achieves the same: each category is a base.)
+            # Half-integer edges isolate every code incl. the last two.
+            seed = np.arange(len(columns[i].categories) - 1) + 0.5
+        e0_all[i], n0_all[i] = _init_edges(vmin, vmax, K1, n_take, seed)
+        columns[i].n_null = n_s - n_valid
+
+    refine_v = jax.vmap(
+        lambda xs, up, e0, n0: refine.refine_1d(
+            xs, up, e0, n0, jnp.float64(m_pts), crit1,
+            s_max=params.s1_max, max_rounds=params.max_rounds_1d))
+    edges_j, k_j = refine_v(jnp.asarray(xs_all), jnp.asarray(up_all),
+                            jnp.asarray(e0_all), jnp.asarray(n0_all))
+
+    meta_v = jax.vmap(
+        lambda xs, up, e, k, mu: refine.metadata_1d(
+            xs, up, e, k, jnp.float64(m_pts), crit1, mu,
+            s_max=params.s1_max))
+    h_j, u_j, vmin_j, vmax_j, c_j, cm_j, cp_j = meta_v(
+        jnp.asarray(xs_all), jnp.asarray(up_all), edges_j, k_j,
+        jnp.asarray(mu_all))
+
+    edges_np = np.asarray(edges_j)
+    k_np = np.asarray(k_j)
+    hists: list[Hist1D] = []
+    for i in range(d):
+        k = int(k_np[i])
+        hists.append(Hist1D(
+            edges=edges_np[i, : k + 1].copy(),
+            k=np.int32(k),
+            h=np.asarray(h_j)[i, :k].copy(),
+            u=np.asarray(u_j)[i, :k].copy(),
+            vmin=np.asarray(vmin_j)[i, :k].copy(),
+            vmax=np.asarray(vmax_j)[i, :k].copy(),
+            c=np.asarray(c_j)[i, :k].copy(),
+            cminus=np.asarray(cm_j)[i, :k].copy(),
+            cplus=np.asarray(cp_j)[i, :k].copy(),
+        ))
+
+    # --- 3. pair histograms -------------------------------------------------
+    K2 = params.k2_cap
+    pairs: dict[tuple[int, int], PairHist] = {}
+    sample_j = jnp.asarray(np.nan_to_num(sample, nan=0.0))
+    nanmask = np.isnan(sample)
+
+    def pad_edges(e: np.ndarray) -> np.ndarray:
+        out = np.full(K2 + 1, np.inf, np.float64)
+        out[: min(e.size, K2 + 1)] = e[: K2 + 1]
+        return out
+
+    raw_pairs = {}
+    for i in range(d):
+        for j in range(i):
+            # pair key (j, i): x-dim = lower column index for determinism
+            a, b = j, i
+            valid = jnp.asarray(~(nanmask[:, a] | nanmask[:, b]))
+            ex0 = jnp.asarray(pad_edges(hists[a].edges))
+            ey0 = jnp.asarray(pad_edges(hists[b].edges))
+            kx0 = jnp.int32(min(int(hists[a].k), K2))
+            ky0 = jnp.int32(min(int(hists[b].k), K2))
+            x = sample_j[:, a]
+            y = sample_j[:, b]
+            ex, ey, kx, ky = refine.refine_2d(
+                x, y, valid, ex0, ey0, kx0, ky0, jnp.float64(m_pts), crit2,
+                k2=K2, s_max=params.s2_max, max_rounds=params.max_rounds_2d)
+            out = refine.pair_metadata(x, y, valid, ex, ey, kx, ky, k2=K2)
+            H, hx, ux, vminx, vmaxx, hy, uy, vminy, vmaxy = out
+            nkx, nky = int(kx), int(ky)
+            raw_pairs[(a, b)] = PairHist(
+                ex=np.asarray(ex)[: nkx + 1].copy(),
+                ey=np.asarray(ey)[: nky + 1].copy(),
+                kx=np.int32(nkx), ky=np.int32(nky),
+                H=np.asarray(H)[:nkx, :nky].copy(),
+                hx=np.asarray(hx)[:nkx].copy(), ux=np.asarray(ux)[:nkx].copy(),
+                vminx=np.asarray(vminx)[:nkx].copy(),
+                vmaxx=np.asarray(vmaxx)[:nkx].copy(),
+                hy=np.asarray(hy)[:nky].copy(), uy=np.asarray(uy)[:nky].copy(),
+                vminy=np.asarray(vminy)[:nky].copy(),
+                vmaxy=np.asarray(vmaxy)[:nky].copy(),
+                fold_x=np.zeros(0, np.int32), fold_y=np.zeros(0, np.int32),
+            )
+
+    # --- 4. refine 1-D grids to the union of their pairs' edge sets --------
+    # Aggregation runs on the 1-D grid (Table 3); without this, a uniform
+    # aggregation column would collapse to one bin and every conditional
+    # AVG/SUM would see only the global midpoint. The union grid preserves
+    # the 2-D refinement (this is what the paper's per-dimension 2-D bin
+    # metadata, Fig. 4, buys). Fold maps: 1-D bin -> containing pair row.
+    K1 = params.k1_cap
+    for i in range(d):
+        union = [hists[i].edges]
+        for (a, b), pr in raw_pairs.items():
+            if a == i:
+                union.append(pr.ex)
+            elif b == i:
+                union.append(pr.ey)
+        edges_u = np.unique(np.concatenate(union))
+        edges_u = edges_u[np.isfinite(edges_u)]
+        if edges_u.size > K1 + 1:  # capacity: thin uniformly, keep extremes
+            idx = np.linspace(0, edges_u.size - 1, K1 + 1).round().astype(int)
+            edges_u = edges_u[np.unique(idx)]
+        e_pad = np.full(K1 + 1, np.inf)
+        e_pad[: edges_u.size] = edges_u
+        k_u = edges_u.size - 1
+        h_u, u_u, vmin_u, vmax_u, c_u, cm_u, cp_u = refine.metadata_1d(
+            jnp.asarray(xs_all[i]), jnp.asarray(up_all[i]),
+            jnp.asarray(e_pad), jnp.int32(k_u), jnp.float64(m_pts), crit1,
+            jnp.float64(mu_all[i]), s_max=params.s1_max)
+        hists[i] = Hist1D(
+            edges=edges_u.copy(), k=np.int32(k_u),
+            h=np.asarray(h_u)[:k_u].copy(), u=np.asarray(u_u)[:k_u].copy(),
+            vmin=np.asarray(vmin_u)[:k_u].copy(),
+            vmax=np.asarray(vmax_u)[:k_u].copy(),
+            c=np.asarray(c_u)[:k_u].copy(),
+            cminus=np.asarray(cm_u)[:k_u].copy(),
+            cplus=np.asarray(cp_u)[:k_u].copy())
+
+    for (a, b), pr in raw_pairs.items():
+        pairs[(a, b)] = pr._replace(
+            fold_x=fold_to_rows(hists[a].edges, pr.ex),
+            fold_y=fold_to_rows(hists[b].edges, pr.ey))
+
+    return PairwiseHist(
+        params=params,
+        n_rows=n_total,
+        n_sampled=n_s,
+        columns=columns,
+        hists=hists,
+        pairs=pairs,
+        chi2_table=crit_np,
+    )

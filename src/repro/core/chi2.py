@@ -1,0 +1,89 @@
+"""Chi-squared machinery for the uniformity hypothesis tests (§4.1).
+
+The paper tests the null hypothesis "points are uniform within the bin" with a
+chi-squared statistic over ``s = ceil((2u)^(1/3))`` sub-bins (Terrell–Scott,
+Eq. 2–3) at significance ``alpha``.
+
+Critical values chi2_alpha(df) are needed *inside* jitted refinement loops, so
+we precompute a table indexed by ``s`` (df = s - 1). The quantile itself is
+computed with a Wilson–Hilferty initial guess + bisection on the regularized
+upper incomplete gamma (jax.scipy.special.gammaincc) — self-contained (no
+scipy dependency at runtime; scipy is only used in tests as an oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def chi2_sf(x, df):
+    """Survival function of the chi-squared distribution: Pr(X > x)."""
+    x = jnp.asarray(x, jnp.float64)
+    df = jnp.asarray(df, jnp.float64)
+    return jax.scipy.special.gammaincc(df / 2.0, x / 2.0)
+
+
+def _wilson_hilferty(alpha, df):
+    """Approximate upper quantile (starting point for bisection)."""
+    # z_alpha via Acklam-lite rational approx is overkill; a crude normal
+    # quantile suffices as a *bracket center* only.
+    z = jnp.sqrt(2.0) * _erfinv(1.0 - 2.0 * alpha)
+    term = 1.0 - 2.0 / (9.0 * df) + z * jnp.sqrt(2.0 / (9.0 * df))
+    return df * term**3
+
+
+def _erfinv(y):
+    # jax provides erfinv directly.
+    return jax.scipy.special.erfinv(y)
+
+
+def chi2_isf(alpha: float, df, iters: int = 90):
+    """Inverse survival function: x such that Pr(X > x) = alpha.
+
+    Vectorized over ``df``. Bisection on [0, hi] where hi brackets the root.
+    90 f64 bisection steps resolve to ~1 ulp of the bracket.
+    """
+    df = jnp.asarray(df, jnp.float64)
+    alpha = jnp.float64(alpha)
+    guess = _wilson_hilferty(alpha, jnp.maximum(df, 1.0))
+    hi0 = jnp.maximum(4.0 * guess + 100.0, df + 200.0)
+    lo0 = jnp.zeros_like(df)
+
+    def body(_, state):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        # SF decreases in x: SF(mid) > alpha => root is to the right.
+        go_right = chi2_sf(mid, df) > alpha
+        lo = jnp.where(go_right, mid, lo)
+        hi = jnp.where(go_right, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
+    return 0.5 * (lo + hi)
+
+
+def build_crit_table(alpha: float, s_max: int) -> np.ndarray:
+    """Critical values indexed by the number of sub-bins ``s``.
+
+    ``table[s] = chi2_isf(alpha, df=s-1)`` for s >= 2; entries for s < 2 are
+    +inf (a bin with a single sub-bin can never fail the test — it also can
+    never be split, matching RefineBin1D's u == 1 early-out).
+    """
+    if s_max < 2:
+        raise ValueError("s_max must be >= 2")
+    s = np.arange(s_max + 1)
+    table = np.full(s_max + 1, np.inf, dtype=np.float64)
+    vals = np.asarray(chi2_isf(alpha, jnp.asarray(s[2:] - 1, jnp.float64)))
+    table[2:] = vals
+    return table
+
+
+def num_subbins(u, s_max: int):
+    """Terrell–Scott sub-bin count (Eq. 2): s = ceil((2u)^(1/3)), clipped.
+
+    Accepts float arrays (counts are carried as f64); guards u <= 0.
+    """
+    u = jnp.asarray(u, jnp.float64)
+    s = jnp.ceil(jnp.cbrt(2.0 * jnp.maximum(u, 0.0)))
+    return jnp.clip(s, 1.0, float(s_max)).astype(jnp.int32)

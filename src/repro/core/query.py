@@ -1,0 +1,253 @@
+"""Query planning + execution engine (§5, Fig. 7).
+
+Pipeline: parse (repro.core.sql) -> plan (encode literals into the GD
+pre-processed domain, §5.1; consolidate same-column groups = "delayed
+transformation", §5.2) -> weightings (§5.3) -> aggregate (§5.4) ->
+de-preprocess results.
+
+Value-domain aggregations (SUM/AVG/MIN/MAX/MEDIAN/VAR) run on the *decoded*
+per-bin value metadata (affine inverse of pre-processing preserves ordering),
+so Table 3's bound formulas apply directly in the raw domain.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import aggregate as agg
+from repro.core import coverage as covlib
+from repro.core import sql as sqlmod
+from repro.core import weightings as wlib
+from repro.core.types import PairwiseHist
+
+
+@dataclasses.dataclass
+class QueryResult:
+    estimate: float | None
+    lower: float | None
+    upper: float | None
+    groups: dict | None = None       # GROUP BY: value -> (est, lo, hi)
+    latency_s: float = 0.0
+
+    def as_tuple(self):
+        return (self.estimate, self.lower, self.upper)
+
+
+class PlanError(ValueError):
+    pass
+
+
+class QueryEngine:
+    """Executes the paper's query templates against a PairwiseHist synopsis."""
+
+    def __init__(self, ph: PairwiseHist,
+                 corrected_sampling_bounds: bool = False,
+                 fastpath=None):
+        self.ph = ph
+        self.corrected = corrected_sampling_bounds
+        # Optional fused JAX/Pallas weightings path (repro.core.fastpath).
+        self.fastpath = fastpath
+
+    # ------------------------------------------------------------------ API
+
+    def query(self, sql_text: str) -> QueryResult:
+        q = sqlmod.parse_sql(sql_text)
+        tree = self._plan(q.where)
+        agg_col = None if q.agg_col == "*" else self.ph.col_index(q.agg_col)
+        gcol = None if q.group_by is None else self.ph.col_index(q.group_by)
+        return self.execute(q.func, agg_col, tree, group_by=gcol)
+
+    def execute(self, func: str, agg_col: int | None, tree,
+                group_by: int | None = None) -> QueryResult:
+        t0 = time.perf_counter()
+        if group_by is not None:
+            result = self._group_by(func, agg_col, tree, group_by)
+        else:
+            result = self._single(func, agg_col, tree)
+        result.latency_s = time.perf_counter() - t0
+        return result
+
+    # -------------------------------------------------------------- planning
+
+    def _plan(self, raw):
+        """RawCond/RawNode -> Leaf/Consolidated/Node with encoded literals."""
+        if raw is None:
+            return None
+        node = self._encode(raw)
+        return self._consolidate(node)
+
+    def _encode(self, raw):
+        if isinstance(raw, sqlmod.RawCond):
+            col = self.ph.col_index(raw.col)
+            value = self.ph.columns[col].encode(raw.value)
+            return wlib.Leaf(col, raw.op, value)
+        return wlib.Node(raw.kind, [self._encode(ch) for ch in raw.children])
+
+    def _consolidate(self, node):
+        """Delayed transformation: merge same-column leaves under one AND/OR."""
+        if isinstance(node, wlib.Leaf):
+            return node
+        children = [self._consolidate(ch) for ch in node.children]
+        by_col: dict[int, list] = {}
+        rest = []
+        for ch in children:
+            if isinstance(ch, wlib.Leaf):
+                by_col.setdefault(ch.col, []).append(ch)
+            else:
+                rest.append(ch)
+        merged = []
+        for col, leaves in by_col.items():
+            if len(leaves) == 1:
+                merged.append(leaves[0])
+                continue
+            mu = self.ph.columns[col].mu
+            sets = [covlib.cond_to_intervals(lf.op, lf.value, mu)
+                    for lf in leaves]
+            ivs = (covlib.intersect_intervals(sets) if node.kind == "and"
+                   else covlib.union_intervals(sets))
+            merged.append(wlib.Consolidated(col, ivs))
+        out = merged + rest
+        if len(out) == 1:
+            return out[0]
+        return wlib.Node(node.kind, out)
+
+    # ------------------------------------------------------------- execution
+
+    def _tree_cols(self, tree, acc):
+        if tree is None:
+            return acc
+        if isinstance(tree, (wlib.Leaf, wlib.Consolidated)):
+            acc.add(tree.col)
+            return acc
+        for ch in tree.children:
+            self._tree_cols(ch, acc)
+        return acc
+
+    def _agg_restriction(self, tree, col: int):
+        """Necessary interval restriction the predicate imposes on `col`.
+
+        Any matching row's value of `col` must lie in the returned disjoint
+        interval set (pre-processed domain). Conditions on other columns are
+        unrestrictive. Used to snap MIN/MAX estimates/bounds into the
+        feasible region (sound; beyond-paper refinement, DESIGN §7).
+        """
+        full = [(-np.inf, np.inf)]
+        if tree is None:
+            return full
+        mu = self.ph.columns[col].mu
+        if isinstance(tree, wlib.Leaf):
+            return covlib.cond_to_intervals(tree.op, tree.value, mu) \
+                if tree.col == col else full
+        if isinstance(tree, wlib.Consolidated):
+            return tree.intervals if tree.col == col else full
+        sets = [self._agg_restriction(ch, col) for ch in tree.children]
+        if tree.kind == "and":
+            return covlib.intersect_intervals(sets)
+        return covlib.union_intervals(sets)
+
+    @staticmethod
+    def _snap_up(x: float, intervals, mu: float) -> float:
+        """Smallest grid value >= x inside the interval set."""
+        for lo, hi in intervals:
+            cand = max(x, np.ceil((lo + 1e-12) / mu) * mu) if np.isfinite(lo) else x
+            if cand <= hi:
+                return cand
+        return x
+
+    @staticmethod
+    def _snap_down(x: float, intervals, mu: float) -> float:
+        """Largest grid value <= x inside the interval set."""
+        for lo, hi in reversed(intervals):
+            cand = min(x, np.floor((hi - 1e-12) / mu) * mu) if np.isfinite(hi) else x
+            if cand >= lo:
+                return cand
+        return x
+
+    def _weightings(self, agg_col, tree):
+        if self.fastpath is not None and tree is not None:
+            out = self.fastpath(self.ph, agg_col, tree, self.corrected)
+            if out is not None:
+                return out
+        return wlib.weightings(self.ph, agg_col, tree,
+                               corrected_sampling_bounds=self.corrected)
+
+    def _single(self, func, agg_col, tree) -> QueryResult:
+        ph = self.ph
+        if agg_col is None:  # COUNT(*)
+            if tree is None:
+                n = float(ph.n_rows)
+                return QueryResult(n, n, n)
+            agg_col = min(self._tree_cols(tree, set()))
+        hist = ph.hists[agg_col]
+        col = ph.columns[agg_col]
+        w, wlo, whi = self._weightings(agg_col, tree)
+        rho = ph.rho
+
+        if func == "COUNT":
+            est, lo, hi = agg.agg_count(w, wlo, whi, rho)
+            return QueryResult(est, lo, hi)
+
+        if col.kind == "categorical" and func not in ("COUNT",):
+            raise PlanError(f"{func} over categorical column {col.name!r}")
+
+        # Decode bin value metadata into the raw domain (affine, increasing).
+        dec = lambda a: (np.asarray(a, float) + col.offset) / col.scale  # noqa: E731
+        c, cm, cp = dec(hist.c), dec(hist.cminus), dec(hist.cplus)
+        vmin, vmax = dec(hist.vmin), dec(hist.vmax)
+        hist_raw = hist._replace(vmin=vmin, vmax=vmax, c=c, cminus=cm, cplus=cp)
+
+        pred_cols = self._tree_cols(tree, set())
+        single_col = pred_cols.issubset({agg_col})
+
+        if func == "SUM":
+            est, lo, hi = agg.agg_sum(w, wlo, whi, c, cm, cp, rho)
+        elif func == "AVG":
+            est, lo, hi = agg.agg_avg(w, wlo, whi, c, cm, cp)
+        elif func == "MIN":
+            est, lo, hi = agg.agg_min(w, wlo, whi, hist_raw,
+                                      ph.params.min_points,
+                                      ph.params.s1_max, single_col)
+            if not np.isnan(est):
+                restrict = self._agg_restriction(tree, agg_col)
+                enc = lambda x: x * col.scale - col.offset  # noqa: E731
+                dec = lambda x: (x + col.offset) / col.scale  # noqa: E731
+                est = dec(self._snap_up(enc(est), restrict, col.mu))
+                lo = dec(self._snap_up(enc(lo), restrict, col.mu))
+                hi = dec(self._snap_up(enc(hi), restrict, col.mu))
+                lo, hi = min(lo, est), max(hi, est)
+        elif func == "MAX":
+            est, lo, hi = agg.agg_max(w, wlo, whi, hist_raw,
+                                      ph.params.min_points,
+                                      ph.params.s1_max, single_col)
+            if not np.isnan(est):
+                restrict = self._agg_restriction(tree, agg_col)
+                enc = lambda x: x * col.scale - col.offset  # noqa: E731
+                dec = lambda x: (x + col.offset) / col.scale  # noqa: E731
+                est = dec(self._snap_down(enc(est), restrict, col.mu))
+                lo = dec(self._snap_down(enc(lo), restrict, col.mu))
+                hi = dec(self._snap_down(enc(hi), restrict, col.mu))
+                lo, hi = min(lo, est), max(hi, est)
+        elif func == "MEDIAN":
+            est, lo, hi = agg.agg_median(w, wlo, whi, hist_raw)
+        elif func == "VAR":
+            est, lo, hi = agg.agg_var(w, wlo, whi, c, vmin, vmax)
+        else:
+            raise PlanError(f"unsupported aggregation {func!r}")
+        if np.isnan(est):
+            return QueryResult(None, None, None)
+        return QueryResult(est, lo, hi)
+
+    def _group_by(self, func, agg_col, tree, gcol) -> QueryResult:
+        col = self.ph.columns[gcol]
+        if col.kind != "categorical":
+            raise PlanError(f"GROUP BY requires a categorical column, got {col.name!r}")
+        groups = {}
+        for code, value in enumerate(col.categories):
+            leaf = wlib.Leaf(gcol, "=", float(code))
+            sub = leaf if tree is None else wlib.Node("and", [leaf, tree])
+            res = self._single(func, agg_col, sub)
+            if res.estimate is not None and res.estimate > 0:
+                groups[value] = res.as_tuple()
+        return QueryResult(None, None, None, groups=groups)

@@ -1,0 +1,358 @@
+"""Level-synchronous histogram refinement (TPU adaptation of Alg. 1 + 2).
+
+The paper's ``RefineBin1D``/``RefineBin2D`` are data-dependent recursions. On
+TPU we refine *every* bin of a histogram simultaneously per round inside a
+``lax.while_loop`` over fixed-capacity, +inf-padded edge buffers:
+
+  round:  (1) vectorized per-bin statistics (count, unique count, chi-squared
+              over Terrell–Scott sub-bins) via a single ``searchsorted`` batch;
+          (2) every bin failing the uniformity test inserts its midpoint;
+          (3) edges <- sort(concat(edges, midpoints))[:capacity].
+
+Because the paper splits at the *bin midpoint* (equal-width, §4.1), split
+decisions in 1-D are independent across bins, so this BFS produces **exactly**
+the same final bin set as the paper's depth-first recursion (verified against
+a sequential NumPy oracle in tests). In 2-D, refinement order can matter
+(row/column splits interact); the BFS is the deterministic, order-independent
+variant of the same procedure.
+
+All functions are jit-compatible with static capacities; 1-D refinement is
+vmapped across columns, 2-D across pairs is a host loop re-using one compiled
+function (all pairs share shapes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import chi2 as chi2lib
+
+_INF = jnp.inf
+
+
+# ---------------------------------------------------------------------------
+# Shared vectorized bin statistics (1-D)
+# ---------------------------------------------------------------------------
+
+
+def bin_stats_1d(xs, uprefix, edges, k):
+    """Per-bin (count, unique, vmin, vmax, lo_idx, hi_idx) from sorted data.
+
+    xs:      (N,) sorted ascending; invalid entries (+inf) sorted last.
+    uprefix: (N+1,) uprefix[n] = number of distinct values among xs[:n].
+    edges:   (K+1,) sorted, +inf padded.
+    k:       () number of valid bins.
+    """
+    K = edges.shape[0] - 1
+    n = xs.shape[0]
+    t = jnp.arange(K)
+    left = jnp.searchsorted(xs, edges, side="left")      # (K+1,)
+    right = jnp.searchsorted(xs, edges, side="right")    # (K+1,)
+    lo = left[:-1]
+    # Standard histogram convention: all bins half-open, last valid bin closed.
+    hi = jnp.where(t == k - 1, right[1:], left[1:])
+    valid = t < k
+    lo = jnp.where(valid, lo, n)
+    hi = jnp.where(valid, jnp.maximum(hi, lo), lo)
+    h = (hi - lo).astype(jnp.float64)
+    u = (uprefix[hi] - uprefix[lo]).astype(jnp.float64)
+    vmin = xs[jnp.clip(lo, 0, n - 1)]
+    vmax = xs[jnp.clip(hi - 1, 0, n - 1)]
+    # Empty bins keep their edges as extrema (RefineBin1D line 4).
+    eL, eR = edges[:-1], edges[1:]
+    empty = h == 0
+    vmin = jnp.where(empty, eL, vmin)
+    vmax = jnp.where(empty, eR, vmax)
+    return h, u, vmin, vmax, lo, hi
+
+
+def chi2_stat_1d(xs, edges, k, h, u, lo, hi, s_max: int, crit_table):
+    """Vectorized IsUniform over all bins: returns (chi2, crit, s).
+
+    Sub-bin boundary positions come from one batched searchsorted of the
+    (K, s_max-1) sub-edge matrix into the sorted column.
+    """
+    K = edges.shape[0] - 1
+    n = xs.shape[0]
+    eL, eR = edges[:-1], edges[1:]
+    s = chi2lib.num_subbins(u, s_max)                           # (K,) i32
+    r = jnp.arange(1, s_max)                                    # (s_max-1,)
+    frac = r[None, :] / jnp.maximum(s[:, None], 1)              # (K, s_max-1)
+    width = jnp.where(jnp.isfinite(eR - eL), eR - eL, 0.0)
+    sub_edges = eL[:, None] + width[:, None] * frac
+    pos = jnp.searchsorted(xs, sub_edges.reshape(-1), side="left")
+    pos = pos.reshape(K, s_max - 1)
+    in_range = r[None, :] < s[:, None]
+    pos = jnp.where(in_range, pos, hi[:, None])
+    pos = jnp.clip(pos, lo[:, None], hi[:, None])
+    bounds = jnp.concatenate([lo[:, None], pos, hi[:, None]], axis=1)
+    hbar = jnp.diff(bounds, axis=1).astype(jnp.float64)         # (K, s_max)
+    expect = h / jnp.maximum(s.astype(jnp.float64), 1.0)
+    rr = jnp.arange(s_max)
+    live = rr[None, :] < s[:, None]
+    num = jnp.where(live, (hbar - expect[:, None]) ** 2, 0.0)
+    stat = jnp.sum(num, axis=1) / jnp.maximum(expect, 1e-30)
+    crit = crit_table[jnp.clip(s, 0, crit_table.shape[0] - 1)]
+    return stat, crit, s
+
+
+# ---------------------------------------------------------------------------
+# 1-D refinement
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("s_max", "max_rounds"))
+def refine_1d(xs, uprefix, init_edges, n_init, min_points, crit_table,
+              s_max: int = 128, max_rounds: int = 64):
+    """Refine one column's histogram. Returns (edges, k).
+
+    xs:         (N,) sorted values, invalid rows = +inf at the end.
+    init_edges: (K+1,) initial edges (+inf padded), K = capacity.
+    n_init:     () number of valid initial bins.
+    min_points: M.
+    """
+    K = init_edges.shape[0] - 1
+
+    def cond(state):
+        _, _, n_split, rounds = state
+        return (n_split > 0) & (rounds < max_rounds)
+
+    def body(state):
+        edges, k, _, rounds = state
+        h, u, _, _, lo, hi = bin_stats_1d(xs, uprefix, edges, k)
+        stat, crit, _ = chi2_stat_1d(xs, edges, k, h, u, lo, hi, s_max, crit_table)
+        t = jnp.arange(K)
+        eL, eR = edges[:-1], edges[1:]
+        z = 0.5 * (eL + eR)
+        splittable = (z > eL) & (z < eR) & jnp.isfinite(z)
+        split = (
+            (t < k)
+            & (h >= min_points)      # "fewer than M tuples" -> no split
+            & (u > 1.0)              # single unique value -> no split
+            & (stat > crit)          # IsUniform -> no split
+            & splittable
+        )
+        # Capacity guard: keep at most (K - k) new edges (first-come by index).
+        avail = K - k
+        rank = jnp.cumsum(split.astype(jnp.int32)) - 1
+        split = split & (rank < avail)
+        n_split = jnp.sum(split, dtype=jnp.int32)
+        new = jnp.where(split, z, _INF)
+        edges = jnp.sort(jnp.concatenate([edges, new]))[: K + 1]
+        return edges, (k + n_split).astype(jnp.int32), n_split, rounds + 1
+
+    state = (init_edges, n_init.astype(jnp.int32), jnp.int32(1), jnp.int32(0))
+    edges, k, _, _ = jax.lax.while_loop(cond, body, state)
+    return edges, k
+
+
+@functools.partial(jax.jit, static_argnames=("s_max",))
+def metadata_1d(xs, uprefix, edges, k, min_points, crit_table, mu,
+                s_max: int = 128):
+    """Final per-bin metadata for a refined 1-D histogram.
+
+    Returns (h, u, vmin, vmax, c, cminus, cplus) — Eq. 10 for the centre
+    bounds, midpoint c = (v+ + v-)/2.
+    """
+    h, u, vmin, vmax, _, _ = bin_stats_1d(xs, uprefix, edges, k)
+    c = 0.5 * (vmin + vmax)
+    cminus, cplus = centre_bounds(h, u, vmin, vmax, min_points, crit_table, mu,
+                                  s_max=s_max)
+    return h, u, vmin, vmax, c, cminus, cplus
+
+
+def centre_bounds(h, u, vmin, vmax, min_points, crit_table, mu, s_max: int):
+    """Weighted-centre bounds (Theorem 1 / Eq. 10).
+
+    Non-passing bins (h < M): c± = v± ∓ (u-1)u·mu / (2h).
+    Passing bins:            c± = v- + (s±1)δ/2 ± (δ/6)·sqrt(3·chi2_a·(s²-1)/h).
+    """
+    s = chi2lib.num_subbins(u, s_max).astype(jnp.float64)
+    delta = (vmax - vmin) / jnp.maximum(s, 1.0)
+    crit = crit_table[jnp.clip(s.astype(jnp.int32), 0, crit_table.shape[0] - 1)]
+    crit = jnp.where(jnp.isfinite(crit), crit, 0.0)  # s<2 => degenerate bin
+    hsafe = jnp.maximum(h, 1.0)
+
+    spread = (delta / 6.0) * jnp.sqrt(3.0 * crit * (s**2 - 1.0) / hsafe)
+    c_lo_pass = vmin + (s - 1.0) * delta / 2.0 - spread
+    c_hi_pass = vmin + (s + 1.0) * delta / 2.0 + spread
+
+    shift = (u - 1.0) * u * mu / (2.0 * hsafe)
+    c_lo_fail = vmin + shift
+    c_hi_fail = vmax - shift
+
+    fail = h < min_points
+    cminus = jnp.where(fail, c_lo_fail, c_lo_pass)
+    cplus = jnp.where(fail, c_hi_fail, c_hi_pass)
+
+    mid = 0.5 * (vmin + vmax)
+    degenerate = u <= 1.0
+    cminus = jnp.where(degenerate, mid, cminus)
+    cplus = jnp.where(degenerate, mid, cplus)
+    cminus = jnp.clip(cminus, vmin, vmax)
+    cplus = jnp.clip(cplus, cminus, vmax)
+    return cminus, cplus
+
+
+# ---------------------------------------------------------------------------
+# 2-D refinement
+# ---------------------------------------------------------------------------
+
+
+def _bin_index(vals, edges, k):
+    """Bin index per point under the half-open-except-last convention."""
+    idx = jnp.searchsorted(edges, vals, side="right") - 1
+    return jnp.clip(idx, 0, jnp.maximum(k - 1, 0))
+
+
+def _slice_unique(sort_primary, sort_value, valid, num_segments):
+    """Unique-value counts per segment via lexsort + first-occurrence flags."""
+    order = jnp.lexsort((sort_value, sort_primary))
+    seg = sort_primary[order]
+    val = sort_value[order]
+    ok = valid[order]
+    new_seg = jnp.concatenate([jnp.array([True]), seg[1:] != seg[:-1]])
+    new_val = jnp.concatenate([jnp.array([True]), val[1:] != val[:-1]])
+    first = (new_seg | new_val) & ok
+    return jax.ops.segment_sum(first.astype(jnp.float64), seg,
+                               num_segments=num_segments)
+
+
+def _cell_chi2(vals, lo, width, cell, h_cell, u_cell, valid, k2: int,
+               s_max: int, crit_table):
+    """Per-cell chi-squared uniformity statistic along one dimension.
+
+    vals/lo/width: per-point value + its cell's interval in this dimension.
+    cell:          per-point flattened cell id in [0, k2*k2).
+    h_cell/u_cell: per-cell totals (k2*k2,).
+    """
+    ncell = k2 * k2
+    s = chi2lib.num_subbins(u_cell, s_max)                       # (ncell,)
+    s_pt = s[cell]
+    frac = jnp.where(width > 0, (vals - lo) / width, 0.0)
+    r = jnp.clip((frac * s_pt).astype(jnp.int32), 0, s_pt - 1)
+    flat = jnp.where(valid, cell * s_max + r, ncell * s_max)
+    hbar = jax.ops.segment_sum(jnp.ones_like(vals), flat,
+                               num_segments=ncell * s_max + 1)[:-1]
+    hbar = hbar.reshape(ncell, s_max)
+    sf = jnp.maximum(s.astype(jnp.float64), 1.0)
+    expect = h_cell / sf
+    rr = jnp.arange(s_max)
+    live = rr[None, :] < s[:, None]
+    num = jnp.where(live, (hbar - expect[:, None]) ** 2, 0.0)
+    stat = jnp.sum(num, axis=1) / jnp.maximum(expect, 1e-30)
+    crit = crit_table[jnp.clip(s, 0, crit_table.shape[0] - 1)]
+    return stat, crit
+
+
+@functools.partial(jax.jit, static_argnames=("k2", "s_max", "max_rounds"))
+def refine_2d(x, y, valid, ex0, ey0, kx0, ky0, min_points, crit_table,
+              k2: int, s_max: int = 32, max_rounds: int = 16):
+    """Refine a pair histogram. Returns (ex, ey, kx, ky).
+
+    x, y:   (N,) point coordinates (pre-processed domain); `valid` masks rows
+            where either column is null.
+    ex0/ey0: (K2+1,) initial edges = the columns' final 1-D edges (padded).
+    """
+    ncell = k2 * k2
+
+    def cond(state):
+        _, _, _, _, n_split, rounds = state
+        return (n_split > 0) & (rounds < max_rounds)
+
+    def body(state):
+        ex, ey, kx, ky, _, rounds = state
+        bi = _bin_index(x, ex, kx)
+        bj = _bin_index(y, ey, ky)
+        cell = bi * k2 + bj
+        cell_m = jnp.where(valid, cell, ncell)
+        ones = jnp.where(valid, 1.0, 0.0)
+        h_cell = jax.ops.segment_sum(ones, cell_m, num_segments=ncell + 1)[:-1]
+
+        ux_cell = _slice_unique(cell_m, x, valid, ncell + 1)[:-1]
+        uy_cell = _slice_unique(cell_m, y, valid, ncell + 1)[:-1]
+
+        lox, wx = ex[bi], ex[bi + 1] - ex[bi]
+        loy, wy = ey[bj], ey[bj + 1] - ey[bj]
+        stat_x, crit_x = _cell_chi2(x, lox, wx, cell, h_cell, ux_cell, valid,
+                                    k2, s_max, crit_table)
+        stat_y, crit_y = _cell_chi2(y, loy, wy, cell, h_cell, uy_cell, valid,
+                                    k2, s_max, crit_table)
+
+        eligible = h_cell > min_points                      # Alg. 1 line 17
+        fail_x = eligible & (ux_cell > 1.0) & (stat_x > crit_x)
+        fail_y = eligible & (uy_cell > 1.0) & (stat_y > crit_y)
+        # "split applied to the least uniform column": larger excess ratio.
+        exc_x = jnp.where(fail_x, stat_x / jnp.maximum(crit_x, 1e-30), -1.0)
+        exc_y = jnp.where(fail_y, stat_y / jnp.maximum(crit_y, 1e-30), -1.0)
+        pick_x = fail_x & (~fail_y | (exc_x >= exc_y))
+        pick_y = fail_y & ~pick_x
+
+        # A split in cell (ti, tj) along x inserts the midpoint of row ti's
+        # interval — applying to the whole row (Fig. 5). Reduce cell->row.
+        ti = jnp.arange(ncell) // k2
+        tj = jnp.arange(ncell) % k2
+        want_x = jax.ops.segment_max(pick_x.astype(jnp.int32), ti,
+                                     num_segments=k2).astype(bool)
+        want_y = jax.ops.segment_max(pick_y.astype(jnp.int32), tj,
+                                     num_segments=k2).astype(bool)
+
+        tK = jnp.arange(k2)
+        zx = 0.5 * (ex[:-1] + ex[1:])
+        zy = 0.5 * (ey[:-1] + ey[1:])
+        ok_x = want_x & (tK < kx) & (zx > ex[:-1]) & (zx < ex[1:])
+        ok_y = want_y & (tK < ky) & (zy > ey[:-1]) & (zy < ey[1:])
+        rank_x = jnp.cumsum(ok_x.astype(jnp.int32)) - 1
+        rank_y = jnp.cumsum(ok_y.astype(jnp.int32)) - 1
+        ok_x = ok_x & (rank_x < (k2 - kx))
+        ok_y = ok_y & (rank_y < (k2 - ky))
+        nx = jnp.sum(ok_x, dtype=jnp.int32)
+        ny = jnp.sum(ok_y, dtype=jnp.int32)
+
+        ex = jnp.sort(jnp.concatenate([ex, jnp.where(ok_x, zx, _INF)]))[: k2 + 1]
+        ey = jnp.sort(jnp.concatenate([ey, jnp.where(ok_y, zy, _INF)]))[: k2 + 1]
+        return (ex, ey, (kx + nx).astype(jnp.int32), (ky + ny).astype(jnp.int32),
+                (nx + ny).astype(jnp.int32), rounds + 1)
+
+    state = (ex0, ey0, kx0.astype(jnp.int32), ky0.astype(jnp.int32),
+             jnp.int32(1), jnp.int32(0))
+    ex, ey, kx, ky, _, _ = jax.lax.while_loop(cond, body, state)
+    return ex, ey, kx, ky
+
+
+@functools.partial(jax.jit, static_argnames=("k2",))
+def pair_metadata(x, y, valid, ex, ey, kx, ky, k2: int):
+    """Final pair-histogram metadata (counts + per-dim slice aggregates).
+
+    Fold maps (1-D union bin -> pair row) are computed host-side in
+    repro.core.build.fold_to_rows after the 1-D grids are union-refined.
+    """
+    ncell = k2 * k2
+    bi = _bin_index(x, ex, kx)
+    bj = _bin_index(y, ey, ky)
+    cell = jnp.where(valid, bi * k2 + bj, ncell)
+    ones = jnp.where(valid, 1.0, 0.0)
+    H = jax.ops.segment_sum(ones, cell, num_segments=ncell + 1)[:-1]
+    H = H.reshape(k2, k2)
+
+    big = jnp.float64(jnp.finfo(jnp.float64).max)
+    row = jnp.where(valid, bi, k2)
+    col = jnp.where(valid, bj, k2)
+
+    def slice_meta(seg, vals, edges, k):
+        hh = jax.ops.segment_sum(ones, seg, num_segments=k2 + 1)[:-1]
+        vmin = jax.ops.segment_min(jnp.where(valid, vals, big), seg,
+                                   num_segments=k2 + 1)[:-1]
+        vmax = jax.ops.segment_max(jnp.where(valid, vals, -big), seg,
+                                   num_segments=k2 + 1)[:-1]
+        uu = _slice_unique(seg, vals, valid, k2 + 1)[:-1]
+        empty = hh == 0
+        vmin = jnp.where(empty, edges[:-1], vmin)
+        vmax = jnp.where(empty, edges[1:], vmax)
+        return hh, uu, vmin, vmax
+
+    hx, ux, vminx, vmaxx = slice_meta(row, x, ex, kx)
+    hy, uy, vminy, vmaxy = slice_meta(col, y, ey, ky)
+    return H, hx, ux, vminx, vmaxx, hy, uy, vminy, vmaxy

@@ -1,0 +1,444 @@
+"""Compact synopsis storage encoding (§4.3, Fig. 6, Eq. 11–13).
+
+Re-derivable quantities (bin midpoints c, weighted-centre bounds c±, slice
+totals h = H row/column sums, fold maps) are NOT stored. Counts matrices are
+stored dense (ℓ_h bits per cell, Eq. 13) or sparse (Golomb–Rice-coded deltas
+of non-zero flat indices + ℓ_h-bit counts), whichever is smaller, with a
+1-bit flag per histogram — exactly the paper's scheme.
+
+Values (edges / extrema) are integers in the pre-processed domain; edges
+gain dyadic fractions from midpoint splits, so each edge array is encoded as
+zig-zag varint numerators over a shared power-of-two denominator.
+
+Everything is bit-level (BitWriter/BitReader below); decode reconstructs a
+full runtime ``PairwiseHist`` (centre bounds recomputed via Eq. 10).
+"""
+from __future__ import annotations
+
+import math
+import struct
+
+import numpy as np
+
+from repro.core import chi2 as chi2lib
+from repro.core.types import BuildParams, ColumnInfo, Hist1D, PairHist, PairwiseHist
+
+_MAGIC = b"PWH1"
+
+
+# ---------------------------------------------------------------------------
+# Bit-level IO
+# ---------------------------------------------------------------------------
+
+
+class BitWriter:
+    def __init__(self):
+        self.buf = bytearray()
+        self.acc = 0
+        self.nbits = 0
+
+    def write(self, value: int, nbits: int):
+        if nbits == 0:
+            return
+        value &= (1 << nbits) - 1
+        self.acc = (self.acc << nbits) | value
+        self.nbits += nbits
+        while self.nbits >= 8:
+            self.nbits -= 8
+            self.buf.append((self.acc >> self.nbits) & 0xFF)
+        self.acc &= (1 << self.nbits) - 1
+
+    def write_varint(self, value: int):
+        """Unsigned bit-level LEB128 (7-bit chunks + continuation bit)."""
+        v = int(value)
+        if v < 0:
+            raise ValueError("varint is unsigned")
+        while True:
+            chunk = v & 0x7F
+            v >>= 7
+            self.write(1 if v else 0, 1)
+            self.write(chunk, 7)
+            if not v:
+                break
+
+    def write_svarint(self, value: int):
+        """Zig-zag signed varint."""
+        v = int(value)
+        self.write_varint((v << 1) ^ (v >> 63) if v >= 0 else ((-v) << 1) - 1)
+
+    def write_rice(self, value: int, b: int):
+        """Golomb–Rice with divisor 2**b: quotient unary + b-bit remainder."""
+        q = int(value) >> b
+        for _ in range(q):
+            self.write(1, 1)
+        self.write(0, 1)
+        self.write(int(value) & ((1 << b) - 1), b)
+
+    def write_f64(self, value: float):
+        for byte in struct.pack("<d", float(value)):
+            self.write(byte, 8)
+
+    def getvalue(self) -> bytes:
+        out = bytearray(self.buf)
+        if self.nbits:
+            out.append((self.acc << (8 - self.nbits)) & 0xFF)
+        return bytes(out)
+
+
+class BitReader:
+    def __init__(self, data: bytes):
+        self.data = data
+        self.pos = 0  # bit position
+
+    def read(self, nbits: int) -> int:
+        out = 0
+        for _ in range(nbits):
+            byte = self.data[self.pos >> 3]
+            bit = (byte >> (7 - (self.pos & 7))) & 1
+            out = (out << 1) | bit
+            self.pos += 1
+        return out
+
+    def read_varint(self) -> int:
+        shift, out = 0, 0
+        while True:
+            cont = self.read(1)
+            chunk = self.read(7)
+            out |= chunk << shift
+            shift += 7
+            if not cont:
+                return out
+
+    def read_svarint(self) -> int:
+        z = self.read_varint()
+        return (z >> 1) if (z & 1) == 0 else -((z + 1) >> 1)
+
+    def read_rice(self, b: int) -> int:
+        q = 0
+        while self.read(1):
+            q += 1
+        return (q << b) | self.read(b)
+
+    def read_f64(self) -> float:
+        raw = bytes(self.read(8) for _ in range(8))
+        return struct.unpack("<d", raw)[0]
+
+
+# ---------------------------------------------------------------------------
+# Edge / value array codecs
+# ---------------------------------------------------------------------------
+
+
+def _dyadic_exponent(arr: np.ndarray, cap: int = 40) -> int | None:
+    """Smallest p such that arr * 2^p is integral (None if > cap)."""
+    a = np.asarray(arr, np.float64)
+    for p in range(cap + 1):
+        scaled = a * (1 << p)
+        if np.all(np.abs(scaled - np.round(scaled)) < 1e-6) and \
+           np.all(np.abs(scaled) < 2**62):
+            return p
+    return None
+
+
+def _encode_values(w: BitWriter, arr: np.ndarray):
+    """Dyadic-rational array as (flag, p, varint deltas); f64 fallback."""
+    arr = np.asarray(arr, np.float64)
+    p = _dyadic_exponent(arr)
+    if p is None:
+        w.write(1, 1)
+        for v in arr:
+            w.write_f64(v)
+        return
+    w.write(0, 1)
+    w.write_varint(p)
+    ints = np.round(arr * (1 << p)).astype(np.int64)
+    prev = 0
+    for v in ints:
+        w.write_svarint(int(v) - prev)
+        prev = int(v)
+
+
+def _decode_values(r: BitReader, n: int) -> np.ndarray:
+    if r.read(1):
+        return np.array([r.read_f64() for _ in range(n)], np.float64)
+    p = r.read_varint()
+    out = np.empty(n, np.int64)
+    acc = 0
+    for idx in range(n):
+        acc += r.read_svarint()
+        out[idx] = acc
+    return out.astype(np.float64) / (1 << p)
+
+
+def _bits_for(max_val: float) -> int:
+    """ℓ_h per Eq. 13."""
+    return max(1, int(math.ceil(math.log2(1.0 + max(0.0, float(max_val))))))
+
+
+def _rice_param(mean: float) -> int:
+    """Near-optimal Rice divisor exponent for geometric-ish deltas."""
+    if mean <= 1.0:
+        return 0
+    return max(0, int(round(math.log2(mean))))
+
+
+def _encode_counts(w: BitWriter, H: np.ndarray):
+    """Dense (ℓ_h bits/cell) vs sparse (Rice deltas + ℓ_h counts): smaller wins."""
+    flat = np.asarray(np.round(H), np.int64).reshape(-1)
+    n = flat.size
+    lh = _bits_for(flat.max() if n else 0)
+    nz = np.flatnonzero(flat)
+    theta = nz.size
+    dense_bits = n * lh
+    mean_delta = (n / max(theta, 1))
+    b = _rice_param(mean_delta)
+    deltas = np.diff(nz, prepend=-1) - 1  # gaps between non-zeros
+    sparse_bits = 32 + theta * lh + int(sum(((int(d) >> b) + 1 + b) for d in deltas))
+    w.write_varint(lh)
+    if dense_bits <= sparse_bits:
+        w.write(0, 1)  # I_h: dense
+        for v in flat:
+            w.write(int(v), lh)
+    else:
+        w.write(1, 1)  # I_h: sparse
+        w.write_varint(theta)
+        w.write_varint(b)
+        for d in deltas:
+            w.write_rice(int(d), b)
+        for v in flat[nz]:
+            w.write(int(v), lh)
+
+
+def _decode_counts(r: BitReader, shape) -> np.ndarray:
+    n = int(np.prod(shape))
+    lh = r.read_varint()
+    flat = np.zeros(n, np.int64)
+    if r.read(1) == 0:
+        for idx in range(n):
+            flat[idx] = r.read(lh)
+    else:
+        theta = r.read_varint()
+        b = r.read_varint()
+        pos = -1
+        idxs = []
+        for _ in range(theta):
+            pos += r.read_rice(b) + 1
+            idxs.append(pos)
+        for idx in idxs:
+            flat[idx] = r.read(lh)
+    return flat.astype(np.float64).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Histogram codecs
+# ---------------------------------------------------------------------------
+
+
+def _encode_dim(w: BitWriter, edges, u, vmin, vmax):
+    k = len(u)
+    w.write_varint(k)
+    _encode_values(w, edges)
+    _encode_values(w, vmin)
+    _encode_values(w, vmax)
+    for val in np.asarray(u, np.int64):
+        w.write_varint(int(val))
+
+
+def _decode_dim(r: BitReader):
+    k = r.read_varint()
+    edges = _decode_values(r, k + 1)
+    vmin = _decode_values(r, k)
+    vmax = _decode_values(r, k)
+    u = np.array([r.read_varint() for _ in range(k)], np.float64)
+    return edges, u, vmin, vmax
+
+
+# ---------------------------------------------------------------------------
+# Top level
+# ---------------------------------------------------------------------------
+
+
+def encode(ph: PairwiseHist) -> bytes:
+    w = BitWriter()
+    for byte in _MAGIC:
+        w.write(byte, 8)
+    w.write_varint(ph.n_rows)
+    w.write_varint(ph.n_sampled)
+    w.write_varint(ph.d)
+    w.write_varint(ph.params.min_points)
+    w.write_f64(ph.params.alpha)
+    w.write_varint(ph.params.s1_max)
+    w.write_varint(ph.params.s2_max)
+
+    for col in ph.columns:
+        kind_code = {"int": 0, "float": 1, "categorical": 2}[col.kind]
+        w.write(kind_code, 2)
+        w.write_f64(col.offset)
+        w.write_f64(col.scale)
+        w.write_f64(col.mu)
+        w.write_varint(col.n_null)
+        name = col.name.encode()
+        w.write_varint(len(name))
+        for byte in name:
+            w.write(byte, 8)
+        cats = "\x00".join(str(c) for c in col.categories).encode()
+        w.write_varint(len(cats))
+        for byte in cats:
+            w.write(byte, 8)
+
+    for hist in ph.hists:
+        _encode_dim(w, hist.edges, hist.u, hist.vmin, hist.vmax)
+        _encode_counts(w, hist.h)
+
+    w.write_varint(len(ph.pairs))
+    for (i, j), pr in sorted(ph.pairs.items()):
+        w.write_varint(i)
+        w.write_varint(j)
+        _encode_dim(w, pr.ex, pr.ux, pr.vminx, pr.vmaxx)
+        _encode_dim(w, pr.ey, pr.uy, pr.vminy, pr.vmaxy)
+        _encode_counts(w, pr.H)
+    return w.getvalue()
+
+
+def _centre_bounds_np(h, u, vmin, vmax, min_points, crit_table, mu, s_max):
+    """NumPy re-derivation of Eq. 10 (mirror of refine.centre_bounds)."""
+    h = np.asarray(h, float)
+    u = np.asarray(u, float)
+    s = np.clip(np.ceil(np.cbrt(2.0 * np.maximum(u, 0.0))), 1, s_max)
+    delta = (vmax - vmin) / np.maximum(s, 1.0)
+    chi = crit_table[np.clip(s.astype(int), 0, len(crit_table) - 1)]
+    chi = np.where(np.isfinite(chi), chi, 0.0)
+    hsafe = np.maximum(h, 1.0)
+    spread = (delta / 6.0) * np.sqrt(3.0 * chi * (s**2 - 1.0) / hsafe)
+    c_lo_pass = vmin + (s - 1.0) * delta / 2.0 - spread
+    c_hi_pass = vmin + (s + 1.0) * delta / 2.0 + spread
+    shift = (u - 1.0) * u * mu / (2.0 * hsafe)
+    fail = h < min_points
+    cminus = np.where(fail, vmin + shift, c_lo_pass)
+    cplus = np.where(fail, vmax - shift, c_hi_pass)
+    mid = 0.5 * (vmin + vmax)
+    degenerate = u <= 1.0
+    cminus = np.where(degenerate, mid, cminus)
+    cplus = np.where(degenerate, mid, cplus)
+    cminus = np.clip(cminus, vmin, vmax)
+    cplus = np.clip(cplus, cminus, vmax)
+    return cminus, cplus
+
+
+def decode(data: bytes) -> PairwiseHist:
+    r = BitReader(data)
+    magic = bytes(r.read(8) for _ in range(4))
+    if magic != _MAGIC:
+        raise ValueError("bad synopsis magic")
+    n_rows = r.read_varint()
+    n_sampled = r.read_varint()
+    d = r.read_varint()
+    min_points = r.read_varint()
+    alpha = r.read_f64()
+    s1_max = r.read_varint()
+    s2_max = r.read_varint()
+    params = BuildParams(n_samples=n_sampled, alpha=alpha,
+                         m_frac=min_points / max(n_sampled, 1),
+                         s1_max=s1_max, s2_max=s2_max)
+    crit = chi2lib.build_crit_table(alpha, max(s1_max, s2_max))
+
+    columns = []
+    for _ in range(d):
+        kind = ("int", "float", "categorical")[r.read(2)]
+        offset = r.read_f64()
+        scale = r.read_f64()
+        mu = r.read_f64()
+        n_null = r.read_varint()
+        nlen = r.read_varint()
+        name = bytes(r.read(8) for _ in range(nlen)).decode()
+        clen = r.read_varint()
+        raw = bytes(r.read(8) for _ in range(clen)).decode()
+        cats = tuple(raw.split("\x00")) if raw else ()
+        columns.append(ColumnInfo(name=name, kind=kind, offset=offset,
+                                  scale=scale, categories=cats,
+                                  n_null=n_null, mu=mu))
+
+    hists = []
+    for i in range(d):
+        edges, u, vmin, vmax = _decode_dim(r)
+        h = _decode_counts(r, (len(u),))
+        c = 0.5 * (vmin + vmax)
+        cm, cp = _centre_bounds_np(h, u, vmin, vmax, min_points, crit,
+                                   columns[i].mu, s1_max)
+        hists.append(Hist1D(edges=edges, k=np.int32(len(u)), h=h, u=u,
+                            vmin=vmin, vmax=vmax, c=c, cminus=cm, cplus=cp))
+
+    def fold_map(edges1, edges_pair):
+        """1-D bin -> containing pair row (pair edges ⊆ 1-D edges)."""
+        mids = 0.5 * (edges1[:-1] + edges1[1:])
+        idx = np.searchsorted(edges_pair, mids, side="right") - 1
+        return np.clip(idx, 0, max(edges_pair.size - 2, 0)).astype(np.int32)
+
+    pairs = {}
+    n_pairs = r.read_varint()
+    for _ in range(n_pairs):
+        i = r.read_varint()
+        j = r.read_varint()
+        ex, ux, vminx, vmaxx = _decode_dim(r)
+        ey, uy, vminy, vmaxy = _decode_dim(r)
+        H = _decode_counts(r, (len(ux), len(uy)))
+        pairs[(i, j)] = PairHist(
+            ex=ex, ey=ey, kx=np.int32(len(ux)), ky=np.int32(len(uy)), H=H,
+            hx=H.sum(1), ux=ux, vminx=vminx, vmaxx=vmaxx,
+            hy=H.sum(0), uy=uy, vminy=vminy, vmaxy=vmaxy,
+            fold_x=fold_map(hists[i].edges, ex),
+            fold_y=fold_map(hists[j].edges, ey),
+        )
+
+    return PairwiseHist(params=params, n_rows=n_rows, n_sampled=n_sampled,
+                        columns=columns, hists=hists, pairs=pairs,
+                        chi2_table=crit)
+
+
+def eq12_bound(ph: PairwiseHist) -> int:
+    """The paper's storage upper bound (Eq. 12), in bytes, for comparison."""
+    d = ph.d
+
+    def mbytes(col_idx):
+        hist = ph.hists[col_idx]
+        vmax = max(abs(float(hist.vmax.max() if len(hist.vmax) else 1)), 1.0)
+        return max(1, int(math.ceil(math.log2(vmax + 2) / 8)))
+
+    total = 29 + d + 4 * d * d
+    for i in range(d):
+        k_sum = 0
+        for j in range(d):
+            if i == j:
+                continue
+            pr = ph.pair(i, j)
+            k_sum += int(pr.kx)
+        k_i = int(ph.hists[i].k)
+        total += (3 * mbytes(i) + 4) * (k_sum + k_i - (d - 1) * k_i + k_i)
+    for (i, j), pr in ph.pairs.items():
+        lh = _bits_for(pr.H.max() if pr.H.size else 0)
+        total += math.ceil(int(pr.kx) * int(pr.ky) * lh / 8)
+    return total
+
+
+def synopsis_size_report(ph: PairwiseHist) -> dict:
+    """Encoded size breakdown (bytes)."""
+    blob = encode(ph)
+    # Re-encode pieces for a rough breakdown.
+    w = BitWriter()
+    for hist in ph.hists:
+        _encode_dim(w, hist.edges, hist.u, hist.vmin, hist.vmax)
+        _encode_counts(w, hist.h)
+    size_1d = len(w.getvalue())
+    w = BitWriter()
+    for pr in ph.pairs.values():
+        _encode_dim(w, pr.ex, pr.ux, pr.vminx, pr.vmaxx)
+        _encode_dim(w, pr.ey, pr.uy, pr.vminy, pr.vmaxy)
+        _encode_counts(w, pr.H)
+    size_2d = len(w.getvalue())
+    return {
+        "total": len(blob),
+        "hists_1d": size_1d,
+        "hists_2d": size_2d,
+        "header_and_dicts": len(blob) - size_1d - size_2d,
+        "eq12_bound": eq12_bound(ph),
+    }

@@ -1,0 +1,3 @@
+# Generalized Deduplication compression substrate (GreedyGD, §3 + Fig. 2/3).
+from repro.gd.preprocess import preprocess_table, Preprocessed  # noqa: F401
+from repro.gd.greedygd import GreedyGD, CompressedTable  # noqa: F401

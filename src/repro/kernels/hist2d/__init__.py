@@ -1,0 +1,1 @@
+from repro.kernels.hist2d.ops import hist2d  # noqa: F401

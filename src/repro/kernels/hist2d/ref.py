@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the hist2d kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hist2d_ref(bi, bj, weights, ki: int, kj: int):
+    """Weighted 2-D histogram: H[a, b] = sum_n w_n [bi_n == a][bj_n == b].
+
+    bi/bj: (N,) int32 bin indices (out-of-range rows must carry weight 0).
+    weights: (N,) float32.
+    """
+    h = jnp.zeros((ki, kj), jnp.float32)
+    bi = jnp.clip(bi, 0, ki - 1)
+    bj = jnp.clip(bj, 0, kj - 1)
+    return h.at[bi, bj].add(weights.astype(jnp.float32))

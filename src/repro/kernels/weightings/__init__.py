@@ -1,0 +1,1 @@
+from repro.kernels.weightings.ops import fused_weightings  # noqa: F401

@@ -1,0 +1,45 @@
+"""Jitted wrapper for the fused weightings kernel: pad + dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.weightings.ref import fused_weightings_ref
+from repro.kernels.weightings.weightings import fused_weightings_pallas
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+_ref_jit = jax.jit(fused_weightings_ref)
+
+
+def fused_weightings(h_stack, beta, fold, hx, *, use_pallas: bool = True,
+                     interpret: bool | None = None):
+    """See ref.py for semantics. Pads K1/K2 to 128 multiples for the MXU.
+
+    Padding is value-safe: padded H rows/cols and beta/hx entries are zero
+    => p_row pads to 0; padded fold rows are zero => p1 pads to 0 and those
+    1-D bins are sliced away.
+    """
+    h_stack = jnp.asarray(h_stack, jnp.float32)
+    beta = jnp.asarray(beta, jnp.float32)
+    fold = jnp.asarray(fold, jnp.float32)
+    hx = jnp.asarray(hx, jnp.float32)
+    if not use_pallas:
+        return _ref_jit(h_stack, beta, fold, hx)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    el, k2, _ = h_stack.shape
+    k1 = fold.shape[1]
+    k2p = _round_up(k2, 128)
+    k1p = _round_up(k1, 128)
+    if (k2p, k1p) != (k2, k1):
+        h_stack = jnp.pad(h_stack, ((0, 0), (0, k2p - k2), (0, k2p - k2)))
+        beta = jnp.pad(beta, ((0, 0), (0, k2p - k2)))
+        hx = jnp.pad(hx, ((0, 0), (0, k2p - k2)))
+        fold = jnp.pad(fold, ((0, 0), (0, k1p - k1), (0, k2p - k2)))
+    out = fused_weightings_pallas(h_stack, beta, fold, hx,
+                                  interpret=bool(interpret))
+    return out[:k1]

@@ -1,0 +1,66 @@
+"""Pallas-TPU kernel: fused multi-predicate weightings (§5.3, Eq. 28).
+
+The paper's query path runs ~3 small ops per predicate (mat-vec, divide,
+fold) plus a combine — at sub-ms latencies the launch/dispatch overhead
+dominates. This kernel fuses the whole AND-chain:
+
+    grid step l (one per predicate):
+        v     = beta_l @ H_l^T        (1 x K2) @ (K2 x K2)   [MXU]
+        p_row = clip(v / hx_l, 0, 1)                          [VPU]
+        p1    = p_row @ fold_l^T      (1 x K2) @ (K1 x K2)^T  [MXU]
+        acc  *= p1                    running product         [VPU]
+
+One launch per query instead of ~3 ops x n_predicates. The accumulator
+stays resident in VMEM across the whole grid; H/beta/hx/fold stream per
+predicate. Everything is padded to 128-lane multiples by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(h_ref, beta_ref, hx_ref, fold_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.ones_like(out_ref)
+
+    hmat = h_ref[0]                        # (K2, K2)
+    beta = beta_ref[0]                     # (1, K2)
+    hx = hx_ref[0]                         # (1, K2)
+    fold = fold_ref[0]                     # (K1, K2)
+    v = jax.lax.dot_general(beta, hmat, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, K2)
+    p_row = jnp.clip(v / jnp.maximum(hx, 1e-30), 0.0, 1.0)
+    p1 = jax.lax.dot_general(p_row, fold, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (1, K1)
+    out_ref[...] *= p1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_weightings_pallas(h_stack, beta, fold, hx, interpret: bool = True):
+    """h_stack (L,K2,K2) f32, beta (L,K2), fold (L,K1,K2), hx (L,K2).
+
+    Returns prod_l fold_l(clip(H_l beta_l / hx_l, 0, 1)), shape (K1,).
+    """
+    el, k2, _ = h_stack.shape
+    k1 = fold.shape[1]
+    beta2 = beta[:, None, :]               # (L, 1, K2)
+    hx2 = hx[:, None, :]                   # (L, 1, K2)
+    prod = pl.pallas_call(
+        _kernel,
+        grid=(el,),
+        in_specs=[
+            pl.BlockSpec((1, k2, k2), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, 1, k2), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, 1, k2), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, k1, k2), lambda l: (l, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k1), lambda l: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, k1), jnp.float32),
+        interpret=interpret,
+    )(h_stack, beta2, hx2, fold)
+    return prod[0]

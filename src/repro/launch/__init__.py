@@ -1,0 +1,3 @@
+# Launch entry points: mesh construction, the multi-pod dry-run, training and
+# serving drivers. NOTE: dryrun.py must be the process entry (it sets
+# XLA_FLAGS before any jax import).

@@ -1,0 +1,477 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). REPRO_DRYRUN_DEVICES overrides for debug meshes.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record memory / cost / collective statistics.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b \
+        --shape train_4k --multi-pod
+    REPRO_DRYRUN_DEVICES=8 ... --debug-mesh                     # (2,2)/(2,2,2)
+
+Results are cached as JSON under benchmarks/dryrun_results/ (one file per
+cell); --force recomputes. EXPERIMENTS.md §Dry-run/§Roofline read these.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+
+from repro.configs import ARCHS, get_config  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import make_debug_mesh, make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.sharding import rules as R  # noqa: E402
+from repro.train.optimizer import Hyper  # noqa: E402
+from repro.train.step import TrainState, make_train_step  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "dryrun_results")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s+(.*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _result_bytes(segment: str) -> int:
+    """Largest typed shape in the result segment (handles -start tuples)."""
+    best = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n * _DTYPE_BYTES[dt])
+    return best
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_OLD_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device wire bytes per collective kind from the partitioned HLO.
+
+    Result shapes in the partitioned module are per-device. Ring model:
+      all-gather:    (g-1)/g x result          (result = gathered)
+      all-reduce:    2 (g-1)/g x result
+      reduce-scatter:(g-1)   x result          (result = scattered shard)
+      all-to-all:    (g-1)/g x result
+      collective-permute: 1 x result
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_seg, kind = m.group(1), m.group(2)
+        size = _result_bytes(result_seg)
+        g = _group_size(line)
+        factor = {"all-gather": (g - 1) / g,
+                  "all-reduce": 2 * (g - 1) / g,
+                  "reduce-scatter": float(g - 1),
+                  "all-to-all": (g - 1) / g,
+                  "collective-permute": 1.0}[kind]
+        rec = out.setdefault(kind, {"count": 0, "result_bytes": 0,
+                                    "wire_bytes_per_device": 0.0})
+        rec["count"] += 1
+        rec["result_bytes"] += size
+        rec["wire_bytes_per_device"] += size * factor
+    return out
+
+
+def _shard_one(mesh, sds, axes):
+    spec = R.logical_to_spec(axes, shape=sds.shape)
+    return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _shard_sds(mesh, sds_tree, axes_tree):
+    """Attach divisibility-pruned NamedShardings to a ShapeDtypeStruct tree."""
+    flat_sds, treedef = jax.tree_util.tree_flatten(sds_tree)
+    flat_ax = treedef.flatten_up_to(axes_tree)
+    out = [_shard_one(mesh, s, a) for s, a in zip(flat_sds, flat_ax)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _serve_dtype(sds_tree):
+    """Serving params are bf16 (inference weights)."""
+    def conv(sds):
+        if jnp.issubdtype(sds.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(sds.shape, jnp.bfloat16)
+        return sds
+    return jax.tree_util.tree_map(conv, sds_tree)
+
+
+# §Perf hillclimb variants: config overrides + train-step kwargs. A variant
+# cost pass (--cost --variant NAME) produces {arch}__{shape}__single_pod_
+# cost__{NAME}.json for before/after comparison against the baseline.
+VARIANTS = {
+    "cast_bf16": {"step_kwargs": {"cast_bf16": True}},
+    "moe_sort": {"cfg": {"moe_impl": "sort"}},
+    "ssm_mem": {"cfg": {"ssm_chunk": 128, "ssm_bf16_intra": True}},
+    # residual stream sharded over SEQ instead of D (kills the per-matmul
+    # f32 activation all-gathers; saved remat carries stay sharded)
+    "seq_sp": {"rules": {"resid_seq": ("model",), "resid_embed": ()}},
+    # bf16 RMSNorm with f32 accumulation: keeps the residual all-gathers in
+    # bf16 (the f32 upcast otherwise gets hoisted before the gather)
+    "bf16_norm": {"cfg": {"norm_upcast": False}},
+    # replicate the residual at block ENTRY: one all-gather per layer at the
+    # saved-carry boundary instead of per-matmul gathers from propagation
+    "zero_r": {"rules": {"blk_in_embed": ()}},
+    # zero_r + bf16 norm (the entry gather then carries a bf16 tensor)
+    "zero_r_bf16": {"rules": {"blk_in_embed": ()},
+                    "cfg": {"norm_upcast": False}},
+    # save TP-matmul outputs under remat: backward stops re-running the
+    # forward's boundary collectives (trades HBM for wire)
+    "remat_dots": {"cfg": {"remat_policy": "dots"}},
+    # deployable middle ground: save ONLY the named per-block projections
+    # (the all-reduce-carrying tensors) — most of the wire win, bounded HBM
+    "remat_names": {"cfg": {"remat_policy": "blk_out"}},
+    "combo": {"step_kwargs": {"cast_bf16": True},
+              "cfg": {"moe_impl": "sort", "ssm_chunk": 128,
+                      "ssm_bf16_intra": True},
+              "rules": {"resid_seq": ("model",), "resid_embed": ()}},
+}
+
+
+def arch_rules(cfg, model_size: int) -> dict:
+    rules = dict(R.LOGICAL_RULES)
+    heads_ok = cfg.heads_shardable and cfg.n_heads % model_size == 0
+    kv_ok = cfg.n_kv > 0 and cfg.n_kv % model_size == 0
+    rules["heads"] = ("model",) if heads_ok else ()
+    # KV cache: shard heads when they divide the tensor axis; otherwise fall
+    # back to sequence-sharded KV (distributed-softmax decode).
+    rules["kv_heads"] = ("model",) if kv_ok else ()
+    rules["kv_seq"] = () if kv_ok else ("model",)
+    return rules
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, debug_mesh: bool,
+               unrolled: bool = False, n_layers: int | None = None,
+               variant: str | None = None):
+    """Returns (lowered, meta) for one cell."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    step_kwargs = {}
+    if variant:
+        spec = VARIANTS[variant]
+        if spec.get("cfg"):
+            cfg = _dc.replace(cfg, **spec["cfg"])
+        step_kwargs = dict(spec.get("step_kwargs", {}))
+    if n_layers is not None:
+        cfg = _dc.replace(cfg, n_layers=n_layers)
+    if unrolled:
+        cfg = _dc.replace(cfg, force_unroll=True)
+    ok, why = S.shape_supported(cfg, shape)
+    if not ok:
+        return None, {"skipped": True, "reason": why}
+    mesh = (make_debug_mesh(multi_pod=multi_pod) if debug_mesh
+            else make_production_mesh(multi_pod=multi_pod))
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    rules = arch_rules(cfg, model_size)
+    if variant and VARIANTS[variant].get("rules"):
+        rules.update(VARIANTS[variant]["rules"])
+    R.set_mesh(mesh, rules)
+    info = S.SHAPES[shape]
+    key = jax.random.PRNGKey(0)
+
+    if info["kind"] == "train":
+        param_sds = jax.eval_shape(lambda: M.init_params(cfg, key))
+        param_ax = M.param_logical_axes(cfg)
+        opt_sds = {"mu": param_sds, "nu": param_sds}
+        opt_ax = {"mu": param_ax, "nu": param_ax}
+        state_sds = TrainState(
+            params=_shard_sds(mesh, param_sds, param_ax),
+            opt=_shard_sds(mesh, opt_sds, opt_ax),
+            step=jax.ShapeDtypeStruct(
+                (), jnp.int32,
+                sharding=NamedSharding(mesh, R.logical_to_spec(()))))
+        bspecs = S.batch_specs(cfg, info["batch"], info["seq"])
+        batch_sds = {k: _shard_one(mesh, sds, ax)
+                     for k, (sds, ax) in bspecs.items()}
+        train_step = make_train_step(cfg, Hyper(), **step_kwargs)
+        state_sh = jax.tree_util.tree_map(lambda s: s.sharding, state_sds)
+        fn = jax.jit(train_step, donate_argnums=(0,),
+                     out_shardings=(state_sh, None))
+        lowered = fn.lower(state_sds, batch_sds)
+    else:
+        param_sds = _serve_dtype(jax.eval_shape(lambda: M.init_params(cfg, key)))
+        param_sds = _shard_sds(mesh, param_sds, M.param_logical_axes(cfg))
+        cache_sds, cache_ax = S.cache_specs(cfg, info["batch"], info["seq"])
+        cache_sds = _shard_sds(mesh, cache_sds, cache_ax)
+        if info["kind"] == "prefill":
+            tok_sds, tok_ax = S.prompt_specs(cfg, info["batch"], info["seq"])
+        else:
+            tok_sds, tok_ax = S.token_specs(cfg, info["batch"])
+        tok_sds = _shard_one(mesh, tok_sds, tok_ax)
+        step_fn = M.prefill if info["kind"] == "prefill" else M.decode_step
+
+        def serve_step(params, tok, cache):
+            return step_fn(params, cfg, tok, cache)
+
+        cache_sh = jax.tree_util.tree_map(lambda s: s.sharding, cache_sds)
+        fn = jax.jit(serve_step, donate_argnums=(2,),
+                     out_shardings=(None, cache_sh))
+        lowered = fn.lower(param_sds, tok_sds, cache_sds)
+    meta = {"mesh": tuple(mesh.devices.shape), "n_devices": mesh.devices.size}
+    return lowered, meta
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, debug_mesh: bool = False,
+             keep_text: bool = False, unrolled: bool = False,
+             n_layers: int | None = None, variant: str | None = None) -> dict:
+    t0 = time.time()
+    result = {"arch": arch, "shape": shape, "unrolled": unrolled,
+              "n_layers": n_layers, "variant": variant,
+              "mesh": "multi_pod" if multi_pod else "single_pod"}
+    try:
+        lowered, meta = lower_cell(arch, shape, multi_pod, debug_mesh,
+                                   unrolled=unrolled, n_layers=n_layers,
+                                   variant=variant)
+        if lowered is None:
+            result.update(meta)
+            return result
+        result.update(meta)
+        result["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = time.time() - t1
+        try:
+            mem = compiled.memory_analysis()
+            result["memory_analysis"] = {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes")
+                if hasattr(mem, k)}
+        except Exception as exc:  # CPU backend may not support it
+            result["memory_analysis"] = {"error": str(exc)}
+        try:
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            result["cost_analysis"] = {
+                k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and
+                (k in ("flops", "bytes accessed", "optimal_seconds")
+                 or k.startswith("bytes accessed"))}
+        except Exception as exc:
+            result["cost_analysis"] = {"error": str(exc)}
+        hlo = compiled.as_text()
+        result["collectives"] = parse_collectives(hlo)
+        result["hlo_bytes"] = len(hlo)
+        if keep_text:
+            result["hlo_text"] = hlo
+        result["ok"] = True
+    except Exception as exc:
+        result["ok"] = False
+        result["error"] = f"{type(exc).__name__}: {exc}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    result["total_s"] = time.time() - t0
+    return result
+
+
+def cell_path(arch: str, shape: str, mesh_name: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def _combine_costs(full: dict, u1: dict, u2: dict, n_super: int) -> dict:
+    """true = full + (n_super - 1) * (U2 - U1), per metric.
+
+    XLA counts while bodies once, so the full (scan) program already carries
+    exactly ONE superblock's cost; two shallow *inlined* variants measure the
+    marginal cost of one more superblock (flops, bytes, collectives).
+    """
+    out = {"method": "U1/U2 extrapolation", "n_super": n_super}
+    scale = n_super - 1
+
+    def delta(key):
+        a = u2.get("cost_analysis", {}).get(key, 0.0)
+        b = u1.get("cost_analysis", {}).get(key, 0.0)
+        return max(a - b, 0.0)
+
+    cost = {}
+    for key in ("flops", "bytes accessed"):
+        base = full.get("cost_analysis", {}).get(key, 0.0)
+        cost[key] = base + scale * delta(key)
+    out["cost_analysis"] = cost
+
+    coll = {}
+    kinds = set(full.get("collectives", {})) | set(u1.get("collectives", {})) \
+        | set(u2.get("collectives", {}))
+    for kind in kinds:
+        f = full.get("collectives", {}).get(kind, {})
+        a = u1.get("collectives", {}).get(kind, {})
+        b = u2.get("collectives", {}).get(kind, {})
+        dw = max(b.get("wire_bytes_per_device", 0.0)
+                 - a.get("wire_bytes_per_device", 0.0), 0.0)
+        dc = max(b.get("count", 0) - a.get("count", 0), 0)
+        coll[kind] = {
+            "count": f.get("count", 0) + scale * dc,
+            "wire_bytes_per_device": (f.get("wire_bytes_per_device", 0.0)
+                                      + scale * dw),
+        }
+    out["collectives"] = coll
+    out["n_devices"] = full.get("n_devices")
+    out["memory_analysis"] = full.get("memory_analysis")
+    out["u1_compile_s"] = u1.get("compile_s")
+    out["u2_compile_s"] = u2.get("compile_s")
+    out["ok"] = full.get("ok", False) and u1.get("ok", False) \
+        and u2.get("ok", False)
+    for src, name in ((u1, "u1"), (u2, "u2")):
+        if not src.get("ok"):
+            out[f"{name}_error"] = src.get("error")
+    return out
+
+
+def run_cost_cell(arch: str, shape: str, debug_mesh: bool = False,
+                  variant: str | None = None) -> dict:
+    """Exact-cost record for one single-pod cell via U1/U2 extrapolation."""
+    cfg = get_config(arch)
+    ok, why = S.shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "skipped": True, "reason": why}
+    base = 1 if cfg.first_dense else 0
+    pat = len(cfg.block_pattern)
+    groups = cfg.layer_groups()
+    n_super = max(rep for _, rep in groups)
+    full_path = cell_path(arch, shape, "single_pod")
+    if variant is None and os.path.exists(full_path):
+        with open(full_path) as fh:
+            full = json.load(fh)
+    else:
+        full = run_cell(arch, shape, False, debug_mesh=debug_mesh,
+                        variant=variant)
+    u1 = run_cell(arch, shape, False, debug_mesh=debug_mesh, unrolled=True,
+                  n_layers=base + pat, variant=variant)
+    u2 = run_cell(arch, shape, False, debug_mesh=debug_mesh, unrolled=True,
+                  n_layers=base + 2 * pat, variant=variant)
+    out = _combine_costs(full, u1, u2, n_super)
+    out.update({"arch": arch, "shape": shape, "mesh": "single_pod",
+                "variant": variant})
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(S.SHAPES),
+                    help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="only the 2-pod mesh (default: both meshes)")
+    ap.add_argument("--single-pod", action="store_true",
+                    help="only the single-pod mesh")
+    ap.add_argument("--debug-mesh", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--unrolled", action="store_true",
+                    help="force-unroll layer scans for exact FLOP/collective "
+                         "accounting (single-pod roofline pass)")
+    ap.add_argument("--cost", action="store_true",
+                    help="U1/U2 cost-extrapolation pass (single-pod): exact "
+                         "FLOP/collective totals without unrolling the full "
+                         "depth")
+    ap.add_argument("--variant", default=None, choices=list(VARIANTS),
+                    help="apply a §Perf optimization variant (with --cost)")
+    args = ap.parse_args()
+
+    if args.cost:
+        archs = [args.arch] if args.arch else list(ARCHS)
+        shapes = [args.shape] if args.shape else list(S.SHAPES)
+        suffix = "single_pod_cost" + (f"__{args.variant}" if args.variant
+                                      else "")
+        n_fail = 0
+        for arch in archs:
+            for shape in shapes:
+                path = cell_path(arch, shape, suffix)
+                if os.path.exists(path) and not args.force:
+                    with open(path) as fh:
+                        prev = json.load(fh)
+                    if prev.get("ok") or prev.get("skipped"):
+                        print(f"[cached] cost {arch} {shape}")
+                        continue
+                res = run_cost_cell(arch, shape, debug_mesh=args.debug_mesh,
+                                    variant=args.variant)
+                with open(path, "w") as fh:
+                    json.dump(res, fh, indent=1)
+                if res.get("skipped"):
+                    print(f"[skip]   cost {arch} {shape}")
+                elif res.get("ok"):
+                    fl = res["cost_analysis"]["flops"]
+                    print(f"[ok]     cost {arch} {shape} flops/dev={fl:.3g}")
+                else:
+                    n_fail += 1
+                    print(f"[FAIL]   cost {arch} {shape}: "
+                          f"{res.get('u1_error') or res.get('u2_error')}")
+        return 1 if n_fail else 0
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(S.SHAPES)
+    meshes = []
+    if not args.multi_pod:
+        meshes.append(("single_pod", False))
+    if not args.single_pod:
+        meshes.append(("multi_pod", True))
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name, mp in meshes:
+                suffix = mesh_name + ("_unrolled" if args.unrolled else "")
+                path = cell_path(arch, shape, suffix)
+                if os.path.exists(path) and not args.force:
+                    with open(path) as fh:
+                        prev = json.load(fh)
+                    if prev.get("ok") or prev.get("skipped"):
+                        print(f"[cached] {arch} {shape} {mesh_name}")
+                        n_ok += prev.get("ok", False)
+                        n_skip += prev.get("skipped", False)
+                        continue
+                res = run_cell(arch, shape, mp, debug_mesh=args.debug_mesh,
+                               unrolled=args.unrolled)
+                with open(path, "w") as fh:
+                    json.dump(res, fh, indent=1)
+                if res.get("skipped"):
+                    n_skip += 1
+                    print(f"[skip]   {arch} {shape} {mesh_name}: {res['reason'][:60]}")
+                elif res.get("ok"):
+                    n_ok += 1
+                    fl = res.get("cost_analysis", {}).get("flops", 0)
+                    print(f"[ok]     {arch} {shape} {mesh_name} "
+                          f"compile={res['compile_s']:.1f}s flops={fl:.3g}")
+                else:
+                    n_fail += 1
+                    print(f"[FAIL]   {arch} {shape} {mesh_name}: "
+                          f"{res['error'][:200]}")
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state. The dry-run forces 512 host devices *before*
+importing jax; smoke tests see the real single CPU device.
+
+Topology (target: TPU v5e pods):
+  single-pod: (data=16, model=16) = 256 chips; `model` is the ICI-contiguous
+              inner axis (tensor-parallel collectives stay on-chip-neighbor).
+  multi-pod:  (pod=2, data=16, model=16) = 512 chips; `pod` is the DCN axis —
+              only data-parallel gradient reduction crosses it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, devices=jax.devices()[: _prod(shape)])
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Tiny mesh for 8-device subprocess tests: (2,2) or (2,2,2)."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, devices=jax.devices()[: _prod(shape)])
+
+
+def _prod(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out

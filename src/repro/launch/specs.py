@@ -1,0 +1,69 @@
+"""Input specifications for every (architecture x shape) dry-run cell.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for all inputs of the lowered step, plus which
+step function the cell lowers (train_step / prefill / decode_step).
+
+Assigned shapes (LM family):
+  train_4k     seq 4096,   global_batch 256   (training)
+  prefill_32k  seq 32768,  global_batch 32    (inference prefill)
+  decode_32k   cache 32768, global_batch 128  (inference decode, 1 token)
+  long_500k    cache 524288, global_batch 1   (long-context decode;
+               sub-quadratic archs only)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig, cache_logical_axes, init_cache
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention architecture: 500k-token decode "
+                       "requires sub-quadratic attention (DESIGN.md note)")
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Training batch ShapeDtypeStructs (logical axes in .sharding slot)."""
+    specs = {"labels": (jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                        ("batch", None))}
+    if cfg.embed_inputs:
+        specs["embeds"] = (jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                                jnp.bfloat16),
+                           ("batch", None, "embed"))
+    else:
+        specs["tokens"] = (jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                           ("batch", None))
+    return specs
+
+
+def token_specs(cfg: ModelConfig, batch: int) -> tuple:
+    if cfg.embed_inputs:
+        return (jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.bfloat16),
+                ("batch", None, "embed"))
+    return jax.ShapeDtypeStruct((batch,), jnp.int32), ("batch",)
+
+
+def prompt_specs(cfg: ModelConfig, batch: int, seq: int) -> tuple:
+    if cfg.embed_inputs:
+        return (jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16),
+                ("batch", None, "embed"))
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32), ("batch", None)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """(ShapeDtypeStruct tree, logical-axes tree) for the decode cache."""
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    axes = cache_logical_axes(cfg)
+    axes["index"] = ()
+    return shapes, axes

@@ -1,0 +1,11 @@
+from repro.models.model import (  # noqa: F401
+    ModelConfig,
+    init_params,
+    param_logical_axes,
+    forward,
+    loss_fn,
+    init_cache,
+    cache_logical_axes,
+    prefill,
+    decode_step,
+)

@@ -1,0 +1,66 @@
+"""Shared model components: norms, RoPE, initializers, dtype policy.
+
+All functions take explicit dtypes — the LM stack must behave identically
+whether or not x64 is globally enabled (repro.core enables it; the dry-run
+does not import repro.core).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, scale, eps: float = 1e-6, upcast: bool = True):
+    """RMSNorm. upcast=True (default): f32 math on the full tensor — safest,
+    but under GSPMD the f32 convert gets hoisted before the residual-stream
+    all-gather, doubling its wire bytes. upcast=False keeps the tensor bf16
+    and only accumulates the variance in f32 (§Perf 'bf16_norm' variant)."""
+    dtype = x.dtype
+    if upcast:
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+        return out.astype(dtype)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True,
+                   dtype=jnp.float32)
+    inv = jax.lax.rsqrt(var + eps).astype(dtype)
+    return x * inv * (1.0 + scale.astype(jnp.float32)).astype(dtype)
+
+
+def make_rope(positions, head_dim: int, theta: float = 10000.0):
+    """Rotary embedding tables for given positions: (..., head_dim/2) each."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freq  # (..., half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, half) or (S, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch/heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., :half], x32[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def trunc_normal(key, shape, std: float, dtype=jnp.float32):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                              jnp.float32)).astype(dtype)
+
+
+def param_count(params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree_util.tree_leaves(params)))

@@ -1,0 +1,586 @@
+"""Layer library for the 10 assigned architectures.
+
+Pure-functional: every layer is (init_fn, apply_fn) over plain dict pytrees.
+Attention is *blockwise/chunked* (never materializes (S, S) scores): scores
+live per query-chunk in f32, which keeps the 32k-prefill and 4k-train
+memory footprints inside HBM under remat-over-layers. Pallas-TPU flash
+kernels can replace the chunked path on real hardware; the chunked XLA path
+is what the CPU dry-run lowers (see DESIGN.md §3).
+
+Decode paths (single query token) update caches functionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, make_rope, rms_norm, softcap, trunc_normal
+from repro.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# Attention (GQA/MQA, optional qk-norm / soft-capping / local window)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "wq": trunc_normal(ks[0], (d, h, dh), std),
+        "wk": trunc_normal(ks[1], (d, hkv, dh), std),
+        "wv": trunc_normal(ks[2], (d, hkv, dh), std),
+        "wo": trunc_normal(ks[3], (h, dh, d), 1.0 / math.sqrt(h * dh)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), jnp.float32)
+        p["k_norm"] = jnp.zeros((dh,), jnp.float32)
+    return p
+
+
+def attention_axes(cfg):
+    return {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", "kv_heads", None),
+        "wv": ("fsdp", "kv_heads", None),
+        "wo": ("heads", None, "fsdp"),
+        **({"q_norm": (None,), "k_norm": (None,)} if cfg.qk_norm else {}),
+    }
+
+
+_NEG_POS = -(2**30)
+
+
+def _chunked_attention(q, k, v, *, q_positions, kv_positions, window, cap,
+                       chunk):
+    """Blockwise causal attention with explicit absolute positions.
+
+    q: (B, Sq, Hkv, G, dh); k/v: (B, Skv, Hkv, dh).
+    q_positions: (Sq,) int32; kv_positions: (Skv,) int32 (ring caches carry
+    stale slots with very negative positions -> masked automatically).
+    Returns (B, Sq, Hkv, G, dh). Scores are per-chunk f32 (never (S, S)).
+    """
+    b, sq, hkv, g, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+    chunk = min(chunk, sq)
+    if sq % chunk != 0:  # ragged (smoke-test) sizes: single chunk
+        chunk = sq
+    n_chunks = max(sq // chunk, 1)
+    qs = jnp.moveaxis(q.reshape(b, n_chunks, chunk, hkv, g, dh), 1, 0)
+    qp = q_positions.reshape(n_chunks, chunk)
+
+    def one_chunk(carry, inp):
+        qc, q_pos = inp
+        s = jnp.einsum("bchgd,bshd->bhgcs", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        if cap is not None:
+            s = softcap(s, cap)
+        causal = (kv_positions[None, :] <= q_pos[:, None]) \
+            & (kv_positions[None, :] >= 0)  # unwritten ring slots are < 0
+        if window is not None:
+            causal &= kv_positions[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(causal[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgcs,bshd->bchgd", p, v.astype(jnp.float32))
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(one_chunk, None, (qs, qp))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, hkv, g, dh)
+
+
+def attention_apply(p, x, cfg, *, local: bool, cache=None, cache_index=None):
+    """Full-sequence path when cache is None; else cached prefill/decode.
+
+    cache: dict(k/v=(B, S_eff, Hkv, dh), pos=(S_eff,) i32). Local-attention
+    caches are ring buffers of size window; writes go to index % S_eff and
+    masking relies on the stored absolute positions. Returns (out, cache').
+    """
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    g = h // hkv
+    window = cfg.window if local else None
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    positions = jnp.arange(s, dtype=jnp.int32)
+    if cache_index is not None:
+        positions = positions + cache_index
+    cos, sin = make_rope(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    qg = q.reshape(b, s, hkv, g, dh)
+
+    if cache is None:
+        out = _chunked_attention(qg, k, v, q_positions=positions,
+                                 kv_positions=positions, window=window,
+                                 cap=cfg.attn_softcap, chunk=cfg.attn_chunk)
+        new_cache = None
+    elif s > 1:
+        # Prefill (from an empty cache): attend within the prompt itself;
+        # the cache receives the tail needed for future decode steps.
+        out = _chunked_attention(qg, k, v, q_positions=positions,
+                                 kv_positions=positions, window=window,
+                                 cap=cfg.attn_softcap, chunk=cfg.attn_chunk)
+        eff = cache["k"].shape[1]
+        take = min(s, eff)
+        # Ring invariant: position p lives in slot p % eff, so later decode
+        # writes (at index % eff) overwrite the right slots.
+        shift = (s - take) % eff
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], jnp.roll(k[:, -take:], shift, axis=1), 0, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], jnp.roll(v[:, -take:], shift, axis=1), 0, 1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.roll(positions[-take:], shift), 0, 0)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    else:
+        # Single-token decode: ring write at index % eff, mask by positions.
+        eff = cache["k"].shape[1]
+        slot = jax.lax.rem(cache_index, jnp.int32(eff))
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"],
+                                                   positions, slot, 0)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        out = _chunked_attention(qg, ck, cv, q_positions=positions,
+                                 kv_positions=cpos, window=window,
+                                 cap=cfg.attn_softcap, chunk=cfg.attn_chunk)
+    out = out.reshape(b, s, h, dh)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return constrain(out, "batch", "resid_seq", "resid_embed"), new_cache
+
+
+def attention_cache(cfg, batch: int, max_len: int, dtype, local: bool = False):
+    eff = max_len
+    if local and cfg.window:
+        eff = min(max_len, cfg.window)
+    shape = (batch, eff, cfg.n_kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.full((eff,), _NEG_POS, jnp.int32)}
+
+
+def attention_cache_axes():
+    # "kv_seq" is the fallback shard axis when kv heads don't divide the
+    # tensor axis (the dry-run rules enable exactly one of kv_heads/kv_seq).
+    return {"k": ("batch", "kv_seq", "kv_heads", None),
+            "v": ("batch", "kv_seq", "kv_heads", None),
+            "pos": (None,)}
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": trunc_normal(ks[0], (d, f), 1.0 / math.sqrt(d)),
+        "w3": trunc_normal(ks[1], (d, f), 1.0 / math.sqrt(d)),
+        "w2": trunc_normal(ks[2], (f, d), 1.0 / math.sqrt(f)),
+    }
+
+
+def mlp_axes():
+    return {"w1": ("fsdp", "tensor"), "w3": ("fsdp", "tensor"),
+            "w2": ("tensor", "fsdp")}
+
+
+def mlp_apply(p, x, cfg):
+    act = jax.nn.gelu if cfg.mlp_act == "gelu" else jax.nn.silu
+    hcur = act(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
+    hcur = constrain(hcur, "batch", None, "tensor")
+    return hcur @ p["w2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, capacity-based einsum dispatch)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": trunc_normal(ks[0], (d, e), 1.0 / math.sqrt(d)),
+        "w1": trunc_normal(ks[1], (e, d, f), 1.0 / math.sqrt(d)),
+        "w3": trunc_normal(ks[2], (e, d, f), 1.0 / math.sqrt(d)),
+        "w2": trunc_normal(ks[3], (e, f, d), 1.0 / math.sqrt(f)),
+    }
+    if cfg.n_shared > 0:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.d_ff_expert * cfg.n_shared)
+    return p
+
+
+def moe_axes(cfg):
+    ax = {
+        "router": ("fsdp", None),
+        "w1": ("expert", "fsdp", None),
+        "w3": ("expert", "fsdp", None),
+        "w2": ("expert", None, "fsdp"),
+    }
+    if cfg.n_shared > 0:
+        ax["shared"] = mlp_axes()
+    return ax
+
+
+def moe_apply(p, x, cfg):
+    """Top-k MoE FFN. Two dispatch implementations (cfg.moe_impl):
+
+    "einsum" (baseline, Switch/Mesh-TF style): one-hot dispatch/combine
+    einsums — simple and MXU-dense but burns O(S*E*C*d) FLOPs and bytes on
+    the dispatch masks (visible as a depressed useful-FLOP ratio in the
+    roofline table).
+
+    "sort" (optimized): argsort tokens by expert id, place into (E, C)
+    buffers with gathers, combine with a scatter-add — dispatch cost drops
+    from matmul-sized to gather-sized (EXPERIMENTS.md §Perf).
+    """
+    if cfg.moe_impl == "sort":
+        return _moe_apply_sort(p, x, cfg)
+    return _moe_apply_einsum(p, x, cfg)
+
+
+def _moe_router(p, x, cfg):
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(math.ceil(s * k / e * cfg.capacity_factor))
+    cap = min(max(cap, 4), s)
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B,S,E)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (B,S,k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_p, top_e, cap
+
+
+def _moe_ffn(p, xin, cfg):
+    """xin: (..., E, C, D) -> (..., E, C, D)."""
+    act = jax.nn.gelu if cfg.mlp_act == "gelu" else jax.nn.silu
+    hcur = act(jnp.einsum("becd,edf->becf", xin, p["w1"].astype(xin.dtype)))
+    hcur = hcur * jnp.einsum("becd,edf->becf", xin, p["w3"].astype(xin.dtype))
+    return jnp.einsum("becf,efd->becd", hcur, p["w2"].astype(xin.dtype))
+
+
+def _moe_apply_sort(p, x, cfg):
+    """Sort-based dispatch: gathers/scatter-adds instead of one-hot matmuls."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    top_p, top_e, cap = _moe_router(p, x, cfg)
+
+    def per_row(xr, top_pr, top_er):
+        # xr: (S, D); top_er/top_pr: (S, k)
+        flat_e = top_er.reshape(-1)                       # (S*k,)
+        flat_tok = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+        flat_gate = top_pr.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_tok[order], flat_gate[order]
+        # position of each entry within its expert's buffer
+        pos = jnp.arange(s * k, dtype=jnp.int32) - jnp.searchsorted(
+            se, se, side="left").astype(jnp.int32)
+        keep = pos < cap
+        dest = jnp.where(keep, se * cap + pos, e * cap)   # overflow slot
+        buf = jnp.zeros((e * cap + 1, d), x.dtype)
+        buf = buf.at[dest].set(xr[st] * keep[:, None].astype(x.dtype))
+        xin = buf[:-1].reshape(e, cap, d)
+        yout = _moe_ffn(p, xin[None], cfg)[0]             # (E, C, D)
+        ybuf = jnp.concatenate(
+            [yout.reshape(e * cap, d), jnp.zeros((1, d), x.dtype)])
+        contrib = ybuf[dest] * (sg[:, None].astype(x.dtype)
+                                * keep[:, None].astype(x.dtype))
+        out = jnp.zeros((s, d), x.dtype).at[st].add(contrib)
+        return out
+
+    out = jax.vmap(per_row)(x, top_p, top_e)
+    if cfg.n_shared > 0:
+        out = out + mlp_apply(p["shared"], x, cfg)
+    return constrain(out, "batch", "resid_seq", "resid_embed")
+
+
+def _moe_apply_einsum(p, x, cfg):
+    """Capacity-based top-k routing with einsum dispatch/combine.
+
+    Tokens grouped by batch row (group = one sequence): capacity
+    C = ceil(S * k / E * capacity_factor). Dropped tokens fall through the
+    residual (standard Switch behaviour).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    top_p, top_e, cap = _moe_router(p, x, cfg)
+
+    # Position of each (token, choice) in its expert's buffer.
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.float32)       # (B,S,k,E)
+    comb = (onehot * top_p[..., None]).sum(2)                  # (B,S,E)
+    mask = onehot.sum(2)                                       # (B,S,E) 0/1
+    pos = jnp.cumsum(mask, axis=1) - 1.0                       # (B,S,E)
+    keep = (pos < cap) & (mask > 0)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=x.dtype)
+    disp = pos_oh * keep[..., None].astype(x.dtype)            # (B,S,E,C)
+
+    xin = jnp.einsum("bsec,bsd->becd", disp, x)                # (B,E,C,D)
+    xin = constrain(xin, "batch", "expert", None, None)
+    eout = _moe_ffn(p, xin, cfg)
+    eout = constrain(eout, "batch", "expert", None, None)
+    out = jnp.einsum("becd,bsec->bsd", eout,
+                     disp * comb.astype(x.dtype)[..., None])
+    if cfg.n_shared > 0:
+        out = out + mlp_apply(p["shared"], x, cfg)
+    return constrain(out, "batch", "resid_seq", "resid_embed")
+
+
+def moe_aux_loss(p, x, cfg):
+    """Load-balance auxiliary loss (Switch-style)."""
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_e = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_e, cfg.n_experts), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD — state-space duality, chunked)
+# ---------------------------------------------------------------------------
+
+
+def init_ssm(key, cfg):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    nh = din // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_dim = din + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": trunc_normal(ks[0], (d, 2 * din + 2 * n + nh),
+                                1.0 / math.sqrt(d)),
+        "conv_w": trunc_normal(ks[1], (cfg.ssm_conv, conv_dim), 0.2),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": trunc_normal(ks[2], (din, d), 1.0 / math.sqrt(din)),
+    }
+
+
+def ssm_axes():
+    return {"in_proj": ("fsdp", "tensor"), "conv_w": (None, "tensor"),
+            "A_log": (None,), "dt_bias": (None,), "D": (None,),
+            "out_proj": ("tensor", "fsdp")}
+
+
+def _causal_conv(x, w, carry=None):
+    """Depthwise causal conv along seq. x: (B,S,C), w: (W,C).
+
+    carry: (B, W-1, C) previous context (decode); returns (y, new_carry).
+    """
+    width = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = carry.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+            for i in range(width))
+    new_carry = xp[:, -(width - 1):]
+    return y, new_carry
+
+
+def ssm_apply(p, x, cfg, state=None, conv_carry=None):
+    """Chunked SSD forward. state: (B, nh, hd, N) for decode.
+
+    Returns (y, (new_state, new_conv_carry)).
+    """
+    b, s, d = x.shape
+    din = cfg.ssm_expand * d
+    hd = cfg.ssm_head_dim
+    nh = din // hd
+    n = cfg.ssm_state
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + din + 2 * n]
+    dt = zxbcdt[..., -nh:]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_carry)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :din].reshape(b, s, nh, hd)
+    xs = constrain(xs, "batch", None, "tensor", None)
+    bmat = xbc[..., din:din + n]                       # (B,S,N) single group
+    cmat = xbc[..., din + n:]                          # (B,S,N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None])   # (B,S,nh)
+    a = -jnp.exp(p["A_log"])[None, None]               # (1,1,nh)
+    da = dt * a                                        # (B,S,nh) negative
+
+    if state is not None and s == 1:  # single-step decode
+        xs1 = xs[:, 0]                                 # (B,nh,hd)
+        dt1 = dt[:, 0]
+        da1 = jnp.exp(da[:, 0])                        # (B,nh)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt1, bmat[:, 0].astype(jnp.float32),
+                         xs1.astype(jnp.float32))
+        new_state = state * da1[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", new_state, cmat[:, 0].astype(jnp.float32))
+        y = y + p["D"][None, :, None] * xs1.astype(jnp.float32)
+        y = y.reshape(b, 1, din).astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        return y @ p["out_proj"].astype(x.dtype), (new_state, new_conv)
+
+    q = min(cfg.ssm_chunk, s)
+    if s % q != 0:  # ragged (smoke-test) sizes: single chunk
+        q = s
+    nc = s // q
+    # The intra-chunk tensors (lmat/gmat: B,nc,q,q[,nh]) dominate the SSD
+    # layer's HBM traffic; bf16 mode halves it with f32 accumulation in the
+    # einsums (EXPERIMENTS.md §Perf, mamba2 hillclimb).
+    intra_dt = jnp.bfloat16 if cfg.ssm_bf16_intra else jnp.float32
+    xs_c = xs.reshape(b, nc, q, nh, hd)
+    b_c = bmat.reshape(b, nc, q, n).astype(intra_dt)
+    c_c = cmat.reshape(b, nc, q, n).astype(intra_dt)
+    dt_c = dt.reshape(b, nc, q, nh)
+    da_c = da.reshape(b, nc, q, nh)
+    acum = jnp.cumsum(da_c, axis=2)                    # (B,nc,q,nh) f32
+
+    # Intra-chunk (quadratic within chunk): L[i,j] = exp(acum_i - acum_j) i>=j.
+    # Mask *before* exp: the upper triangle has positive diffs whose exp
+    # overflows and poisons the backward pass through where().
+    diff = acum[:, :, :, None] - acum[:, :, None, :, :]  # (B,nc,q,q,nh)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.exp(jnp.where(tri[None, None, ..., None], diff, -1e30))
+    lmat = lmat.astype(intra_dt)
+    # scores g[i,j] = C_i . B_j
+    gmat = jnp.einsum("bcin,bcjn->bcij", c_c, b_c,
+                      preferred_element_type=intra_dt)
+    y_diag = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp", gmat, lmat,
+                        dt_c.astype(intra_dt), xs_c.astype(intra_dt),
+                        preferred_element_type=jnp.float32)
+
+    # Chunk-final states + inter-chunk recurrence.
+    decay_to_end = jnp.exp(acum[:, :, -1:, :] - acum)  # (B,nc,q,nh)
+    chunk_state = jnp.einsum("bcjn,bcjh,bcjh,bcjhp->bchpn", b_c,
+                             decay_to_end, dt_c, xs_c.astype(jnp.float32))
+    chunk_decay = jnp.exp(acum[:, :, -1, :])           # (B,nc,nh)
+
+    def scan_states(h_prev, inp):
+        st, dec = inp
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    init = jnp.zeros((b, nh, hd, n), jnp.float32) if state is None else state
+    last, h_prevs = jax.lax.scan(
+        scan_states,
+        init,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)              # (B,nc,nh,hd,n)
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", c_c, h_prevs,
+                       jnp.exp(acum))
+    y = (y_diag + y_off).reshape(b, s, nh, hd)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = constrain(y, "batch", None, "tensor")
+    return y @ p["out_proj"].astype(x.dtype), (last, new_conv)
+
+
+def ssm_cache(cfg, batch: int, dtype):
+    din = cfg.ssm_expand * cfg.d_model
+    nh = din // cfg.ssm_head_dim
+    return {
+        "state": jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                           din + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def ssm_cache_axes():
+    return {"state": ("batch", "tensor", None, None),
+            "conv": ("batch", None, "tensor")}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    w = cfg.rnn_width
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": trunc_normal(ks[0], (d, w), 1.0 / math.sqrt(d)),
+        "in_gate": trunc_normal(ks[1], (d, w), 1.0 / math.sqrt(d)),
+        "conv_w": trunc_normal(ks[2], (cfg.rnn_conv, w), 0.2),
+        "w_input_gate": trunc_normal(ks[3], (w, w), 1.0 / math.sqrt(w)),
+        "w_rec_gate": trunc_normal(ks[4], (w, w), 1.0 / math.sqrt(w)),
+        "lam": 8.0 * jnp.ones((w,), jnp.float32),  # Λ parameter
+        "out_proj": trunc_normal(ks[5], (w, d), 1.0 / math.sqrt(w)),
+    }
+
+
+def rglru_axes():
+    return {"in_x": ("fsdp", "tensor"), "in_gate": ("fsdp", "tensor"),
+            "conv_w": (None, "tensor"), "w_input_gate": (None, "tensor"),
+            "w_rec_gate": (None, "tensor"), "lam": ("tensor",),
+            "out_proj": ("tensor", "fsdp")}
+
+
+_RG_C = 8.0
+
+
+def rglru_apply(p, x, cfg, state=None, conv_carry=None):
+    """Griffin recurrent block: proj -> causal conv -> RG-LRU -> gated out.
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(Λ) * r_t).
+    """
+    xb = x @ p["in_x"].astype(x.dtype)
+    gate = x @ p["in_gate"].astype(x.dtype)
+    xb, new_conv = _causal_conv(xb, p["conv_w"], conv_carry)
+    xb = constrain(xb, "batch", None, "tensor")
+
+    r = jax.nn.sigmoid((xb @ p["w_rec_gate"].astype(xb.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid((xb @ p["w_input_gate"].astype(xb.dtype)).astype(jnp.float32))
+    log_a = -_RG_C * jax.nn.softplus(p["lam"])[None, None] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xb.astype(jnp.float32))
+
+    if state is not None and x.shape[1] == 1:  # decode: single step
+        h = a[:, 0] * state + gated[:, 0]
+        y = h[:, None]
+        new_state = h
+    else:
+        # associative scan over the linear recurrence h_t = a_t h_{t-1} + b_t
+        if state is not None:  # chain from a carried state
+            gated = gated.at[:, 0].add(a[:, 0] * state)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        a_s, b_s = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        y = b_s
+        new_state = b_s[:, -1]
+    y = y.astype(x.dtype) * jax.nn.gelu(gate)
+    y = constrain(y, "batch", None, "tensor")
+    return y @ p["out_proj"].astype(x.dtype), (new_state, new_conv)
+
+
+def rglru_cache(cfg, batch: int, dtype):
+    return {
+        "state": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rnn_conv - 1, cfg.rnn_width), dtype),
+    }
+
+
+def rglru_cache_axes():
+    return {"state": ("batch", "tensor"), "conv": ("batch", None, "tensor")}

@@ -1,0 +1,401 @@
+"""Model assembly: config, parameter init, train forward, prefill, decode.
+
+Layers are grouped into *superblocks* (one repetition of ``block_pattern``)
+stacked along a leading axis and applied with ``lax.scan`` + ``jax.checkpoint``
+— HLO stays compact for 80-layer models and activations are rematerialized in
+the backward pass. Pattern remainders (e.g. recurrentgemma's 38 = 12x(rec,
+rec, attn) + (rec, rec)) form a second, smaller stack.
+
+Embeddings are tied (logits = x @ embed.T, vocab-sharded).
+``embed_inputs=True`` (VLM/audio stubs) takes pre-computed frontend
+embeddings instead of token ids, per the assignment brief.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.models import layers as L
+from repro.models.common import rms_norm, softcap, trunc_normal
+from repro.sharding import constrain
+
+BLOCK_KINDS = ("attn", "attn_local", "attn_global", "moe", "moe_local",
+               "ssm", "rec")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int = 0
+    n_kv: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    block_pattern: tuple = ("attn",)
+    first_dense: bool = False          # deepseek: layer 0 is dense
+    # attention options
+    qk_norm: bool = False
+    attn_softcap: float | None = None
+    logit_softcap: float | None = None
+    window: int | None = None          # local-attention window
+    rope_theta: float = 10000.0
+    attn_chunk: int = 1024
+    heads_shardable: bool = True       # n_heads % tensor-parallel == 0
+    mlp_act: str = "silu"              # "silu" (SwiGLU) | "gelu" (GeGLU)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    moe_impl: str = "einsum"           # "einsum" (baseline) | "sort" (§Perf)
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    ssm_bf16_intra: bool = False       # bf16 intra-chunk SSD tensors (§Perf)
+    # RG-LRU
+    rnn_width: int = 0
+    rnn_conv: int = 4
+    # modality
+    embed_inputs: bool = False         # frontend stub feeds (B,S,D) embeds
+    sub_quadratic: bool = False        # can run long_500k decode
+    # numerics
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # "nothing": full remat; "dots": save every no-batch-dim matmul output
+    # (§Perf remat_dots — big wire/compute win, big HBM cost); "blk_out":
+    # save only the named per-block output projections — the deployable
+    # middle ground (§Perf remat_names).
+    remat_policy: str = "nothing"
+    norm_upcast: bool = True           # False: bf16 RMSNorm (§Perf bf16_norm)
+    # Cost-analysis mode: XLA counts while-loop bodies ONCE regardless of
+    # trip count, so the dry-run lowers an unrolled variant for exact
+    # FLOP/collective accounting (scan variant stays the memory/compile
+    # deliverable). Never set outside the dry-run.
+    force_unroll: bool = False
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def layer_groups(self):
+        """[(pattern_tuple, n_repeats)] covering all n_layers."""
+        n = self.n_layers - (1 if self.first_dense else 0)
+        pat = self.block_pattern
+        groups = []
+        if self.first_dense:
+            groups.append((("attn",), 1))
+        n_super, rem = divmod(n, len(pat))
+        if n_super:
+            groups.append((pat, n_super))
+        if rem:
+            groups.append((pat[:rem], 1))
+        return groups
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / logical axes
+# ---------------------------------------------------------------------------
+
+_BLOCK_INIT = {
+    "attn": lambda k, cfg: {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                            "attn": L.init_attention(k, cfg),
+                            "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+                            "mlp": L.init_mlp(jax.random.fold_in(k, 1), cfg)},
+    "moe": lambda k, cfg: {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                           "attn": L.init_attention(k, cfg),
+                           "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+                           "moe": L.init_moe(jax.random.fold_in(k, 1), cfg)},
+    "ssm": lambda k, cfg: {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                           "ssm": L.init_ssm(k, cfg)},
+    "rec": lambda k, cfg: {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                           "rec": L.init_rglru(k, cfg),
+                           "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+                           "mlp": L.init_mlp(jax.random.fold_in(k, 1), cfg)},
+}
+for alias, base in (("attn_local", "attn"), ("attn_global", "attn"),
+                    ("moe_local", "moe")):
+    _BLOCK_INIT[alias] = _BLOCK_INIT[base]
+
+
+def _block_axes(kind: str, cfg) -> dict:
+    heads_ax = "heads" if cfg.heads_shardable else None
+    attn_ax = L.attention_axes(cfg)
+    if kind.startswith("attn") or kind.startswith("moe"):
+        out = {"ln1": (None,), "ln2": (None,),
+               "attn": attn_ax}
+        if kind.startswith("moe"):
+            out["moe"] = L.moe_axes(cfg)
+        else:
+            out["mlp"] = L.mlp_axes()
+        return out
+    if kind == "ssm":
+        return {"ln1": (None,), "ssm": L.ssm_axes()}
+    if kind == "rec":
+        return {"ln1": (None,), "rec": L.rglru_axes(),
+                "ln2": (None,), "mlp": L.mlp_axes()}
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, 8)
+    params = {
+        "embed": trunc_normal(keys[0], (cfg.vocab, cfg.d_model),
+                              1.0 / math.sqrt(cfg.d_model)),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        "groups": [],
+    }
+    for gi, (pat, n_rep) in enumerate(cfg.layer_groups()):
+        gkey = jax.random.fold_in(keys[1], gi)
+
+        def one_super(k):
+            return {f"{pi}_{kind}": _BLOCK_INIT[kind](jax.random.fold_in(k, pi), cfg)
+                    for pi, kind in enumerate(pat)}
+
+        stacked = jax.vmap(one_super)(jax.random.split(gkey, n_rep))
+        params["groups"].append(stacked)
+    return params
+
+
+def param_logical_axes(cfg: ModelConfig):
+    """Same tree structure as init_params, leaves = logical axis tuples
+    (stacked layer groups get a leading None for the repeat axis)."""
+    axes = {"embed": ("vocab", "fsdp"), "ln_f": (None,), "groups": []}
+    for pat, _ in cfg.layer_groups():
+        g = {f"{pi}_{kind}": _block_axes(kind, cfg)
+             for pi, kind in enumerate(pat)}
+        g = jax.tree_util.tree_map(lambda ax: (None,) + tuple(ax), g,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        axes["groups"].append(g)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(kind: str, p, x, cfg, cache=None, cache_index=None):
+    """Pre-norm residual block. Returns (x, new_cache).
+
+    Entry constraint: the saved inter-block residual is D-sharded
+    ("resid_embed"), but "blk_in_embed" controls what GSPMD propagates
+    *inside* the block — baseline keeps D-sharding (per-matmul gathers);
+    the §Perf zero_r variant replicates at entry (ONE gather per layer).
+    """
+    x = constrain(x, "batch", None, "blk_in_embed")
+    new_cache = cache
+    if kind.startswith("attn") or kind.startswith("moe"):
+        local = kind.endswith("local")
+        h = rms_norm(x, p["ln1"], upcast=cfg.norm_upcast)
+        attn_out, new_cache = L.attention_apply(
+            p["attn"], h, cfg, local=local, cache=cache,
+            cache_index=cache_index)
+        attn_out = checkpoint_name(attn_out, "attn_out")
+        x = x + attn_out
+        h = rms_norm(x, p["ln2"], upcast=cfg.norm_upcast)
+        if kind.startswith("moe"):
+            ffn = L.moe_apply(p["moe"], h, cfg)
+        else:
+            ffn = L.mlp_apply(p["mlp"], h, cfg)
+        x = x + checkpoint_name(ffn, "ffn_out")
+    elif kind == "ssm":
+        h = rms_norm(x, p["ln1"], upcast=cfg.norm_upcast)
+        state = None if cache is None else cache["state"]
+        conv = None if cache is None else cache["conv"]
+        out, (new_state, new_conv) = L.ssm_apply(p["ssm"], h, cfg, state, conv)
+        x = x + out
+        if cache is not None:
+            new_cache = {"state": new_state, "conv": new_conv}
+    elif kind == "rec":
+        h = rms_norm(x, p["ln1"], upcast=cfg.norm_upcast)
+        state = None if cache is None else cache["state"]
+        conv = None if cache is None else cache["conv"]
+        out, (new_state, new_conv) = L.rglru_apply(p["rec"], h, cfg, state, conv)
+        x = x + out
+        h = rms_norm(x, p["ln2"], upcast=cfg.norm_upcast)
+        x = x + L.mlp_apply(p["mlp"], h, cfg)
+        if cache is not None:
+            new_cache = {"state": new_state, "conv": new_conv}
+    else:
+        raise ValueError(kind)
+    return constrain(x, "batch", "resid_seq", "resid_embed"), new_cache
+
+
+def _superblock(pat, sp, x, cfg, caches=None, cache_index=None):
+    new_caches = {} if caches is not None else None
+    for pi, kind in enumerate(pat):
+        key = f"{pi}_{kind}"
+        cache = None if caches is None else caches.get(key)
+        x, nc = _apply_block(kind, sp[key], x, cfg, cache, cache_index)
+        if caches is not None:
+            new_caches[key] = nc
+    return x, new_caches
+
+
+def embed_tokens(params, cfg, tokens_or_embeds):
+    if cfg.embed_inputs:
+        x = tokens_or_embeds.astype(cfg.act_dtype)
+    else:
+        x = params["embed"].astype(cfg.act_dtype)[tokens_or_embeds]
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.act_dtype)
+    return constrain(x, "batch", "resid_seq", "resid_embed")
+
+
+def forward(params, cfg: ModelConfig, tokens_or_embeds):
+    """Training/scoring forward -> logits (B, S, V) (vocab-sharded)."""
+    x = embed_tokens(params, cfg, tokens_or_embeds)
+    for (pat, n_rep), stacked in zip(cfg.layer_groups(), params["groups"]):
+
+        def body(carry, sp):
+            out, _ = _superblock(pat, sp, carry, cfg)
+            return out, None
+
+        if cfg.remat:
+            if cfg.remat_policy == "dots":
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            elif cfg.remat_policy == "blk_out":
+                policy = jax.checkpoint_policies.save_only_these_names(
+                    "attn_out", "ffn_out")
+            else:
+                policy = jax.checkpoint_policies.nothing_saveable
+            body = jax.checkpoint(body, policy=policy)
+        if n_rep == 1:
+            sp0 = jax.tree_util.tree_map(lambda a: a[0], stacked)
+            x, _ = body(x, sp0)
+        elif cfg.force_unroll:
+            for rep in range(n_rep):
+                sp_i = jax.tree_util.tree_map(lambda a: a[rep], stacked)
+                x, _ = body(x, sp_i)
+        else:
+            x, _ = jax.lax.scan(body, x, stacked)
+    x = rms_norm(x, params["ln_f"], upcast=cfg.norm_upcast)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    if cfg.logit_softcap:
+        logits = softcap(logits, cfg.logit_softcap)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Mean next-token cross-entropy (f32 logsumexp over sharded vocab)."""
+    inputs = batch["embeds"] if cfg.embed_inputs else batch["tokens"]
+    logits = forward(params, cfg, inputs).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = jnp.asarray(nll.size, jnp.float32)
+    return nll.sum() / denom
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(kind, cfg, batch, max_len, dtype):
+    if kind.startswith("attn") or kind.startswith("moe"):
+        return L.attention_cache(cfg, batch, max_len, dtype,
+                                 local=kind.endswith("local"))
+    if kind == "ssm":
+        return L.ssm_cache(cfg, batch, dtype)
+    if kind == "rec":
+        return L.rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _block_cache_axes(kind):
+    if kind.startswith("attn") or kind.startswith("moe"):
+        return L.attention_cache_axes()
+    if kind == "ssm":
+        return L.ssm_cache_axes()
+    return L.rglru_cache_axes()
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked caches mirroring the layer-group structure + position."""
+    dtype = cfg.act_dtype
+    groups = []
+    for pat, n_rep in cfg.layer_groups():
+        def one(_):
+            return {f"{pi}_{kind}": _block_cache(kind, cfg, batch, max_len, dtype)
+                    for pi, kind in enumerate(pat)}
+        stacked = jax.vmap(one)(jnp.arange(n_rep))
+        groups.append(stacked)
+    return {"groups": groups, "index": jnp.zeros((), jnp.int32)}
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    axes = {"groups": [], "index": ()}
+    for pat, _ in cfg.layer_groups():
+        g = {f"{pi}_{kind}": _block_cache_axes(kind)
+             for pi, kind in enumerate(pat)}
+        g = jax.tree_util.tree_map(lambda ax: (None,) + tuple(ax), g,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        axes["groups"].append(g)
+    return axes
+
+
+def _step(params, cfg, x, cache, seq_len: int):
+    """Shared prefill/decode walker over the stacked caches."""
+    index = cache["index"]
+    new_groups = []
+    for (pat, n_rep), stacked_p, stacked_c in zip(
+            cfg.layer_groups(), params["groups"], cache["groups"]):
+
+        def body(carry, inp):
+            sp, sc = inp
+            out, nc = _superblock(pat, sp, carry, cfg, sc, index)
+            return out, nc
+
+        if n_rep == 1:
+            sp0 = jax.tree_util.tree_map(lambda a: a[0], stacked_p)
+            sc0 = jax.tree_util.tree_map(lambda a: a[0], stacked_c)
+            x, nc = body(x, (sp0, sc0))
+            nc = jax.tree_util.tree_map(lambda a: a[None], nc)
+        elif cfg.force_unroll:
+            ncs = []
+            for rep in range(n_rep):
+                sp_i = jax.tree_util.tree_map(lambda a: a[rep], stacked_p)
+                sc_i = jax.tree_util.tree_map(lambda a: a[rep], stacked_c)
+                x, nc_i = body(x, (sp_i, sc_i))
+                ncs.append(nc_i)
+            nc = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ncs)
+        else:
+            x, nc = jax.lax.scan(body, x, (stacked_p, stacked_c))
+        new_groups.append(nc)
+    x = rms_norm(x, params["ln_f"], upcast=cfg.norm_upcast)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    if cfg.logit_softcap:
+        logits = softcap(logits, cfg.logit_softcap)
+    new_cache = {"groups": new_groups, "index": index + seq_len}
+    return constrain(logits, "batch", None, "vocab"), new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens_or_embeds, cache):
+    """Process a prompt batch, filling the cache. Returns (logits, cache)."""
+    x = embed_tokens(params, cfg, tokens_or_embeds)
+    return _step(params, cfg, x, cache, x.shape[1])
+
+
+def decode_step(params, cfg: ModelConfig, token_or_embed, cache):
+    """One token per sequence: (B,) ids or (B,1,D) embeds."""
+    if not cfg.embed_inputs and token_or_embed.ndim == 1:
+        token_or_embed = token_or_embed[:, None]
+    x = embed_tokens(params, cfg, token_or_embed)
+    return _step(params, cfg, x, cache, 1)

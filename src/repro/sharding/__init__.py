@@ -1,0 +1,9 @@
+from repro.sharding.rules import (  # noqa: F401
+    LOGICAL_RULES,
+    MESH_AXES,
+    constrain,
+    logical_to_spec,
+    set_mesh,
+    get_mesh,
+    param_sharding,
+)

@@ -1,0 +1,110 @@
+"""Logical-axis sharding rules (MaxText-style) for the LM substrate.
+
+Physical mesh axes:
+  * ``pod``   — cross-pod data parallelism (DCN axis; multi-pod mesh only)
+  * ``data``  — in-pod data parallel + ZeRO/FSDP weight sharding
+  * ``model`` — tensor parallel (heads / d_ff / vocab / experts) and the
+                residual-stream d_model shard between layers (Megatron-SP
+                flavored: XLA inserts the boundary all-gathers)
+
+Logical axes used by the model code:
+
+  batch      -> (pod, data)      activations' leading dim
+  embed      -> model            residual-stream d_model (activation only)
+  fsdp       -> data             weight dim sharded ZeRO-style
+  tensor     -> model            weight head/ff/vocab/expert dims
+  kv_heads   -> model            KV-cache head dim (padded if not divisible)
+  none       -> replicated
+
+The mesh is installed per-process via ``set_mesh``; with no mesh installed
+every constraint is a no-op, so smoke tests on 1 CPU device run unchanged.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MESH_AXES = ("pod", "data", "model")
+
+LOGICAL_RULES = {
+    "batch": ("pod", "data"),
+    "embed": ("model",),
+    "fsdp": ("data",),
+    "tensor": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "kv_seq": (),           # enabled instead of kv_heads when heads < mesh
+    "expert": ("model",),
+    "vocab": ("model",),
+    # Residual-stream (B, S, D) sharding between blocks. Baseline shards D
+    # ("Megatron-SP over d_model"); the §Perf seq_sp variant shards S
+    # instead, which removes the per-matmul f32 activation all-gathers
+    # (see EXPERIMENTS.md §Perf hillclimb 1).
+    "resid_seq": (),
+    "resid_embed": ("model",),
+    "blk_in_embed": ("model",),   # zero_r variant: () = replicate in-block
+    None: (),
+}
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Mesh | None, rules: dict | None = None):
+    _state.mesh = mesh
+    _state.rules = dict(LOGICAL_RULES if rules is None else rules)
+
+
+def get_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+def _rules() -> dict:
+    return getattr(_state, "rules", LOGICAL_RULES)
+
+
+def logical_to_spec(logical_axes, shape=None) -> P:
+    """Tuple of logical axis names (or None) -> PartitionSpec filtered to the
+    axes that exist on the installed mesh.
+
+    When ``shape`` is given, any dim not evenly divisible by its mesh-axis
+    product is left unsharded (explicit input shardings must divide; this is
+    also how non-16-divisible head counts fall back to replication).
+    """
+    mesh = get_mesh()
+    mesh_axis_names = set(mesh.axis_names) if mesh is not None else set()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+    rules = _rules()
+    spec = []
+    for d, ax in enumerate(logical_axes):
+        phys = [a for a in rules.get(ax, ()) if a in mesh_axis_names]
+        if shape is not None and phys:
+            n = 1
+            for a in phys:
+                n *= sizes[a]
+            if shape[d] % n != 0:
+                phys = []
+        if not phys:
+            spec.append(None)
+        elif len(phys) == 1:
+            spec.append(phys[0])
+        else:
+            spec.append(tuple(phys))
+    return P(*spec)
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical_axes, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_sharding(logical_axes, shape=None) -> NamedSharding | None:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(logical_axes, shape=shape))

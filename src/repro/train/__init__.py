@@ -1,0 +1,2 @@
+from repro.train.optimizer import adamw_init, adamw_update, Hyper  # noqa: F401
+from repro.train.step import make_train_step, TrainState  # noqa: F401

@@ -1,0 +1,83 @@
+"""Pure-JAX AdamW with linear-warmup cosine decay and global-norm clipping.
+
+Optimizer state is a pytree mirroring params (f32 moments), so the params'
+logical sharding axes apply verbatim to mu/nu — ZeRO-style sharded optimizer
+state for free under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Hyper:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(hyper: Hyper, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(hyper.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - hyper.warmup_steps)
+                    / jnp.maximum(hyper.total_steps - hyper.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return hyper.lr * warm * (0.1 + 0.9 * cos)
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return {"mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params)}
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, opt, step, hyper: Hyper):
+    """Returns (new_params, new_opt, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, hyper.clip_norm)
+    lr = schedule(hyper, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - hyper.b1 ** t
+    bc2 = 1.0 - hyper.b2 ** t
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = hyper.b1 * mu + (1.0 - hyper.b1) * g
+        nu = hyper.b2 * nu + (1.0 - hyper.b2) * g * g
+        mhat = mu / bc1
+        vhat = nu / bc2
+        p32 = p.astype(jnp.float32)
+        step_val = mhat / (jnp.sqrt(vhat) + hyper.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/embeddings-1d exempt)
+            step_val = step_val + hyper.weight_decay * p32
+        return (p32 - lr * step_val).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt["mu"])
+    flat_nu = treedef.flatten_up_to(opt["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,36 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_table():
+    rng = np.random.default_rng(1)
+    n = 60_000
+    c0 = rng.integers(0, 1000, n).astype(float)
+    c1 = np.abs(rng.normal(300, 80, n)).round()
+    c2 = (c1 * 3 + rng.normal(0, 30, n)).round()
+    c3 = rng.zipf(1.7, n).clip(1, 40).astype(float)
+    c3[rng.random(n) < 0.04] = np.nan
+    return {"c0": c0, "c1": c1, "c2": c2, "c3": c3}
+
+
+@pytest.fixture(scope="session")
+def synopsis(small_table):
+    from repro.core.build import build_pairwise_hist
+    from repro.core.types import BuildParams, ColumnInfo
+    data = np.stack(list(small_table.values()), 1)
+    cols = [ColumnInfo(name=k, kind="int") for k in small_table]
+    return build_pairwise_hist(data, cols, BuildParams(n_samples=30_000,
+                                                       seed=3))
+
+
+@pytest.fixture(scope="session")
+def engine(synopsis):
+    from repro.core.query import QueryEngine
+    return QueryEngine(synopsis)
+
+
+@pytest.fixture(scope="session")
+def exact(small_table):
+    from repro.aqp.exact import ExactEngine
+    return ExactEngine(small_table)

@@ -1,0 +1,36 @@
+"""Chi-squared machinery vs scipy oracle."""
+import numpy as np
+import pytest
+
+scipy_stats = pytest.importorskip("scipy.stats")
+
+from repro.core import chi2 as chi2lib  # noqa: E402
+
+
+def test_critical_values_match_scipy():
+    table = chi2lib.build_crit_table(alpha=0.001, s_max=128)
+    for s in (2, 3, 5, 10, 32, 64, 128):
+        expected = scipy_stats.chi2.isf(0.001, df=s - 1)
+        assert abs(table[s] - expected) < 1e-6 * max(expected, 1), s
+
+
+@pytest.mark.parametrize("alpha", [0.05, 0.01, 0.001, 1e-5])
+def test_isf_round_trip(alpha):
+    import jax.numpy as jnp
+    df = jnp.asarray([1.0, 4.0, 17.0, 99.0])
+    x = chi2lib.chi2_isf(alpha, df)
+    back = np.asarray(chi2lib.chi2_sf(x, df))
+    np.testing.assert_allclose(back, alpha, rtol=1e-6)
+
+
+def test_degenerate_entries_are_inf():
+    table = chi2lib.build_crit_table(alpha=0.001, s_max=8)
+    assert np.isinf(table[0]) and np.isinf(table[1])
+
+
+def test_num_subbins_terrell_scott():
+    import jax.numpy as jnp
+    u = jnp.asarray([1.0, 4.0, 100.0, 1e6])
+    s = np.asarray(chi2lib.num_subbins(u, 128))
+    # s = ceil((2u)^(1/3))
+    np.testing.assert_array_equal(s, [2, 2, 6, 126])

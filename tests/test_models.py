@@ -1,0 +1,156 @@
+"""Per-architecture smoke + numerical-consistency tests (reduced configs)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          loss_fn, prefill)
+
+B, S = 2, 64
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(arch):
+    return dataclasses.replace(get_config(arch, smoke=True), dtype="float32",
+                               capacity_factor=8.0)
+
+
+def _inputs(cfg):
+    if cfg.embed_inputs:
+        inp = 0.1 * jax.random.normal(KEY, (B, S, cfg.d_model), jnp.float32)
+        return inp, {"embeds": inp,
+                     "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    return toks, {"tokens": toks, "labels": toks}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss_grads(arch):
+    cfg = _cfg(arch)
+    params = init_params(cfg, KEY)
+    inp, batch = _inputs(cfg)
+    logits = forward(params, cfg, inp)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+    loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree_util.tree_leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch):
+    cfg = _cfg(arch)
+    params = init_params(cfg, KEY)
+    inp, _ = _inputs(cfg)
+    cache = init_cache(cfg, B, S)
+    lg_full, _ = prefill(params, cfg, inp, cache)
+    cache2 = init_cache(cfg, B, S)
+    _, cache2 = prefill(params, cfg, inp[:, : S - 1], cache2)
+    last = inp[:, S - 1] if not cfg.embed_inputs else inp[:, S - 1: S]
+    lg_last, _ = decode_step(params, cfg, last, cache2)
+    np.testing.assert_allclose(np.asarray(lg_full[:, -1]),
+                               np.asarray(lg_last[:, 0]),
+                               rtol=1e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_matches_prefill_logits(arch):
+    cfg = _cfg(arch)
+    params = init_params(cfg, KEY)
+    inp, _ = _inputs(cfg)
+    logits = forward(params, cfg, inp)
+    cache = init_cache(cfg, B, S)
+    lg_full, _ = prefill(params, cfg, inp, cache)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(lg_full),
+                               rtol=1e-3, atol=2e-4)
+
+
+def test_moe_routing_mass_conservation():
+    from repro.models import layers as L
+    cfg = _cfg("dbrx_132b")
+    p = L.init_moe(KEY, cfg)
+    x = 0.1 * jax.random.normal(KEY, (B, S, cfg.d_model), jnp.float32)
+    out = L.moe_apply(p, x, cfg)
+    assert out.shape == x.shape
+    assert not bool(jnp.isnan(out).any())
+    aux = L.moe_aux_loss(p, x, cfg)
+    assert float(aux) >= 1.0 - 1e-6  # >= 1 by Cauchy-Schwarz at balance
+
+
+def test_ssm_chunked_equals_naive_recurrence():
+    """SSD chunked algorithm vs the literal per-step recurrence."""
+    from repro.models import layers as L
+    cfg = _cfg("mamba2_1_3b")
+    p = L.init_ssm(KEY, cfg)
+    x = 0.1 * jax.random.normal(KEY, (1, 32, cfg.d_model), jnp.float32)
+    y_chunk, (state, conv) = L.ssm_apply(p, x, cfg)
+    # step-by-step decode over the same inputs must produce the same outputs
+    cache = L.ssm_cache(cfg, 1, jnp.float32)
+    st, cv = cache["state"], cache["conv"]
+    ys = []
+    for t in range(32):
+        y_t, (st, cv) = L.ssm_apply(p, x[:, t: t + 1], cfg, st, cv)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(st),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_rglru_assoc_scan_equals_sequential():
+    from repro.models import layers as L
+    cfg = _cfg("recurrentgemma_9b")
+    p = L.init_rglru(KEY, cfg)
+    x = 0.1 * jax.random.normal(KEY, (1, 16, cfg.d_model), jnp.float32)
+    y_scan, (state, conv) = L.rglru_apply(p, x, cfg)
+    cache = L.rglru_cache(cfg, 1, jnp.float32)
+    st, cv = cache["state"], cache["conv"]
+    ys = []
+    for t in range(16):
+        y_t, (st, cv) = L.rglru_apply(p, x[:, t: t + 1], cfg, st, cv)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_local_window_masks_distant_tokens():
+    """gemma2 local layers must ignore tokens beyond the window."""
+    cfg = dataclasses.replace(_cfg("gemma2_2b"), n_layers=2, window=8)
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (1, 48), 0, cfg.vocab)
+    base = forward(params, cfg, toks)
+    # perturbing a token > window+pattern away must not change the local-only
+    # receptive field... with the global layer present it will; so instead
+    # check pure-local config:
+    cfg_local = dataclasses.replace(cfg, block_pattern=("attn_local",))
+    params_l = init_params(cfg_local, KEY)
+    base_l = forward(params_l, cfg_local, toks)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab)
+    out2 = forward(params_l, cfg_local, toks2)
+    # last position is 47; window 8 x 2 layers -> receptive field 16 << 47
+    np.testing.assert_allclose(np.asarray(base_l[0, -1]),
+                               np.asarray(out2[0, -1]), atol=1e-5)
+
+
+def test_param_counts_near_nominal():
+    """Full configs must land near their nominal parameter counts."""
+    from benchmarks.roofline import _params_of
+    nominal = {
+        "minitron-4b": 4.2e9, "mistral-nemo-12b": 12.2e9,
+        "gemma2-2b": 2.6e9, "qwen3-0.6b": 0.6e9, "dbrx-132b": 132e9,
+        "deepseek-moe-16b": 16.4e9, "internvl2-76b": 70e9,
+        "mamba2-1.3b": 1.3e9, "recurrentgemma-9b": 9e9,
+        "musicgen-medium": 1.5e9,
+    }
+    for arch, want in nominal.items():
+        total, active = _params_of(arch)
+        assert 0.55 * want < total < 1.6 * want, (arch, total, want)
+        assert active <= total

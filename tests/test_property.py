@@ -1,0 +1,154 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coverage as covlib
+from repro.core import chi2 as chi2lib
+from repro.core.storage import BitReader, BitWriter
+
+CRIT = chi2lib.build_crit_table(0.001, 64)
+
+
+# ------------------------------------------------------------------ bit IO
+
+@given(st.lists(st.tuples(st.integers(0, 2**32 - 1), st.integers(1, 33)),
+                min_size=1, max_size=200))
+def test_bitio_roundtrip(pairs):
+    w = BitWriter()
+    for val, nbits in pairs:
+        w.write(val & ((1 << nbits) - 1), nbits)
+    r = BitReader(w.getvalue())
+    for val, nbits in pairs:
+        assert r.read(nbits) == val & ((1 << nbits) - 1)
+
+
+@given(st.lists(st.integers(0, 2**62), min_size=1, max_size=100))
+def test_varint_roundtrip(values):
+    w = BitWriter()
+    for v in values:
+        w.write_varint(v)
+    r = BitReader(w.getvalue())
+    assert [r.read_varint() for _ in values] == values
+
+
+@given(st.lists(st.integers(-2**40, 2**40), min_size=1, max_size=100))
+def test_svarint_roundtrip(values):
+    w = BitWriter()
+    for v in values:
+        w.write_svarint(v)
+    r = BitReader(w.getvalue())
+    assert [r.read_svarint() for _ in values] == values
+
+
+@given(st.lists(st.integers(0, 10000), min_size=1, max_size=100),
+       st.integers(0, 8))
+def test_golomb_rice_roundtrip(values, b):
+    w = BitWriter()
+    for v in values:
+        w.write_rice(v, b)
+    r = BitReader(w.getvalue())
+    assert [r.read_rice(b) for _ in values] == values
+
+
+# ------------------------------------------------------------ GD round-trip
+
+@given(st.integers(0, 2**31), st.integers(1, 6), st.integers(20, 300),
+       st.floats(0, 0.3))
+@settings(max_examples=25, deadline=None)
+def test_gd_lossless(seed, d, n, null_frac):
+    from repro.gd.greedygd import GreedyGD
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 10000, (n, d)).astype(float)
+    data[rng.random((n, d)) < null_frac] = np.nan
+    gd = GreedyGD(search_rows=200)
+    ct = gd.compress(data)
+    rec = gd.decompress(ct)
+    assert np.array_equal(np.isnan(rec), np.isnan(data))
+    assert np.allclose(np.nan_to_num(rec), np.nan_to_num(data))
+
+
+# ------------------------------------------------------- coverage invariants
+
+@given(st.integers(0, 2**31), st.sampled_from(["<", "<=", ">", ">=", "=",
+                                               "!="]))
+@settings(max_examples=50, deadline=None)
+def test_coverage_in_unit_interval_and_bounds_ordered(seed, op):
+    rng = np.random.default_rng(seed)
+    k = rng.integers(2, 30)
+    edges = np.sort(rng.uniform(0, 1000, k + 1))
+    vmin = edges[:-1] + rng.uniform(0, 1, k) * np.diff(edges) * 0.2
+    vmax = vmin + rng.uniform(0, 1, k) * (edges[1:] - vmin)
+    h = rng.integers(0, 500, k).astype(float)
+    u = np.minimum(rng.integers(1, 100, k), np.maximum(h, 1)).astype(float)
+    value = rng.uniform(-100, 1100)
+    beta = covlib.coverage_single(op, value, h, u, vmin, vmax)
+    assert np.all(beta >= 0) and np.all(beta <= 1)
+    lo, hi = covlib.coverage_bounds(beta, h, u, 100, CRIT, 64)
+    assert np.all(lo <= beta + 1e-12)
+    assert np.all(beta <= hi + 1e-12)
+    assert np.all(lo >= 0) and np.all(hi <= 1)
+
+
+# ------------------------------------------------------- interval algebra
+
+_intervals = st.lists(
+    st.tuples(st.floats(-1e6, 1e6), st.floats(0, 1e5)).map(
+        lambda t: (t[0], t[0] + t[1])),
+    min_size=1, max_size=5)
+
+
+@given(_intervals, _intervals, st.floats(-1e6, 1e6))
+@settings(max_examples=100, deadline=None)
+def test_interval_union_intersection_membership(a, b, x):
+    def member(ivs, v):
+        return any(lo <= v <= hi for lo, hi in ivs)
+
+    union = covlib.union_intervals([a, b])
+    inter = covlib.intersect_intervals([a, b])
+    assert member(union, x) == (member(a, x) or member(b, x))
+    assert member(inter, x) == (member(a, x) and member(b, x))
+    # disjointness of the union
+    for (l1, h1), (l2, h2) in zip(union, union[1:]):
+        assert h1 < l2
+
+
+# -------------------------------------------------------- weightings order
+
+_SYNOPSIS_CACHE = {}
+
+
+def _shared_synopsis():
+    """Module-cached synopsis (hypothesis forbids fixtures inside @given)."""
+    if "ph" not in _SYNOPSIS_CACHE:
+        from repro.core.build import build_pairwise_hist
+        from repro.core.types import BuildParams, ColumnInfo
+        rng = np.random.default_rng(1)
+        n = 20_000
+        c0 = rng.integers(0, 1000, n).astype(float)
+        c1 = np.abs(rng.normal(300, 80, n)).round()
+        c2 = (c1 * 3 + rng.normal(0, 30, n)).round()
+        data = np.stack([c0, c1, c2], 1)
+        cols = [ColumnInfo(name=f"c{i}", kind="int") for i in range(3)]
+        _SYNOPSIS_CACHE["ph"] = build_pairwise_hist(
+            data, cols, BuildParams(n_samples=n, seed=3))
+    return _SYNOPSIS_CACHE["ph"]
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=10, deadline=None)
+def test_weightings_bounds_ordered(seed):
+    from repro.core import weightings as wlib
+    synopsis = _shared_synopsis()
+    rng = np.random.default_rng(seed)
+    cols = rng.choice(synopsis.d, 2, replace=False)
+    agg = int(cols[0])
+    pred = int(cols[1])
+    hist = synopsis.hists[pred]
+    val = float(rng.uniform(hist.vmin.min(), hist.vmax.max()))
+    op = rng.choice(["<", "<=", ">", ">=", "="])
+    tree = wlib.Leaf(pred, str(op), val)
+    w, wlo, whi = wlib.weightings(synopsis, agg, tree)
+    assert np.all(wlo <= w + 1e-9)
+    assert np.all(w <= whi + 1e-9)
+    assert np.all(wlo >= -1e-9)
+    assert np.all(whi <= synopsis.hists[agg].h + 1e-9)

@@ -1,0 +1,93 @@
+"""End-to-end query accuracy vs exact ground truth + Table 3 semantics."""
+import numpy as np
+import pytest
+
+
+CASES = [
+    ("SELECT COUNT(c0) FROM t WHERE c1 > 300", 3.0),
+    ("SELECT SUM(c1) FROM t WHERE c2 <= 900 AND c0 < 500", 3.0),
+    ("SELECT AVG(c2) FROM t WHERE c1 >= 250 AND c1 < 350", 1.5),
+    ("SELECT AVG(c1) FROM t WHERE c0 < 100 OR c3 = 2", 2.0),
+    ("SELECT MEDIAN(c1) FROM t WHERE c2 > 600", 2.0),
+    ("SELECT VAR(c1) FROM t WHERE c0 >= 200", 5.0),
+    ("SELECT COUNT(c0) FROM t WHERE c3 = 1", 2.0),
+    ("SELECT COUNT(*) FROM t WHERE c1 > 250 AND c1 < 350 AND c2 > 900", 5.0),
+]
+
+
+@pytest.mark.parametrize("sql,tol_pct", CASES)
+def test_query_error_within_tolerance(engine, exact, sql, tol_pct):
+    res = engine.query(sql)
+    truth = exact.query(sql)
+    assert res.estimate is not None
+    err = abs(res.estimate - truth) / max(abs(truth), 1e-9) * 100
+    assert err < tol_pct, (sql, res.estimate, truth)
+
+
+def test_bounds_are_ordered(engine, exact):
+    for sql, _ in CASES:
+        res = engine.query(sql)
+        assert res.lower - 1e-9 <= res.estimate <= res.upper + 1e-9, sql
+
+
+def test_min_max_same_column_clipping(engine, exact):
+    for sql in ("SELECT MIN(c1) FROM t WHERE c1 > 100",
+                "SELECT MIN(c2) FROM t WHERE c2 >= 777",
+                "SELECT MAX(c1) FROM t WHERE c1 <= 444"):
+        res = engine.query(sql)
+        truth = exact.query(sql)
+        assert res.estimate == pytest.approx(truth, abs=1.0), sql
+
+
+def test_count_star_no_where(engine, small_table):
+    res = engine.query("SELECT COUNT(*) FROM t")
+    assert res.estimate == len(small_table["c0"])
+    assert res.lower == res.upper == res.estimate
+
+
+def test_null_semantics(engine, exact):
+    # c3 has NaNs: COUNT(c3) must exclude them, predicates on c3 are false.
+    res = engine.query("SELECT COUNT(c3) FROM t WHERE c3 >= 1")
+    truth = exact.query("SELECT COUNT(c3) FROM t WHERE c3 >= 1")
+    err = abs(res.estimate - truth) / truth * 100
+    assert err < 3.0
+
+
+def test_empty_result(engine):
+    res = engine.query("SELECT AVG(c1) FROM t WHERE c1 > 999999")
+    assert res.estimate is None
+
+
+def test_delayed_transformation_same_column(engine, exact):
+    # Two conditions on one column must be consolidated, not multiplied
+    # under independence (which would square the selectivity).
+    sql = "SELECT COUNT(c1) FROM t WHERE c1 > 200 AND c1 < 400"
+    res = engine.query(sql)
+    truth = exact.query(sql)
+    err = abs(res.estimate - truth) / truth * 100
+    assert err < 3.0
+
+
+def test_or_of_same_column(engine, exact):
+    sql = "SELECT COUNT(c1) FROM t WHERE c1 < 150 OR c1 > 450"
+    res = engine.query(sql)
+    truth = exact.query(sql)
+    err = abs(res.estimate - truth) / max(truth, 1) * 100
+    assert err < 6.0
+
+
+def test_group_by(small_table):
+    import copy
+    from repro.aqp.engine import AQPFramework
+    from repro.core.types import BuildParams
+    table = copy.deepcopy(small_table)
+    table["cat"] = np.where(table["c0"] < 500, "low", "high")
+    fw = AQPFramework(BuildParams(n_samples=30_000)).ingest(table)
+    res = fw.query("SELECT AVG(c1) FROM t WHERE c2 > 600 GROUP BY cat")
+    assert set(res.groups) == {"low", "high"}
+    mask = table["c2"] > 600
+    for name in ("low", "high"):
+        sel = mask & (table["cat"] == name)
+        truth = np.nanmean(table["c1"][sel])
+        est = res.groups[name][0]
+        assert abs(est - truth) / truth < 0.03

@@ -1,0 +1,83 @@
+"""Level-synchronous refinement vs the paper-faithful sequential oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chi2 as chi2lib
+from repro.core import ref_sequential, refine
+
+
+def _bfs_edges(x, init, m_pts, crit):
+    K = 384
+    xs = np.sort(x)
+    up = np.concatenate([[0], np.cumsum(np.concatenate([[True],
+                                                        xs[1:] != xs[:-1]]))])
+    e0 = np.full(K + 1, np.inf)
+    e0[: len(init)] = init
+    edges, k = refine.refine_1d(jnp.asarray(xs), jnp.asarray(up),
+                                jnp.asarray(e0), jnp.int32(len(init) - 1),
+                                jnp.float64(m_pts), jnp.asarray(crit))
+    return np.asarray(edges)[: int(k) + 1]
+
+
+@pytest.mark.parametrize("dist", ["bimodal", "uniform", "zipf", "steps"])
+def test_bfs_equals_sequential_recursion(dist):
+    rng = np.random.default_rng(11)
+    n = 4000
+    x = {
+        "bimodal": np.where(rng.random(n) < 0.4, rng.normal(50, 3, n),
+                            rng.normal(200, 30, n)).round(),
+        "uniform": rng.integers(0, 50, n).astype(float),
+        "zipf": rng.zipf(1.6, n).clip(1, 500).astype(float),
+        "steps": np.repeat(np.arange(8.0) * 100, n // 8)
+        + rng.integers(0, 30, n),
+    }[dist]
+    crit = chi2lib.build_crit_table(0.001, 128)
+    m_pts = 40
+    init = np.array([x.min(), x.max()], float)
+    e_seq, h, u, vmin, vmax = ref_sequential.build_1d_sequential(
+        x, init, m_pts, crit)
+    e_bfs = _bfs_edges(x, init, m_pts, crit)
+    assert e_seq.size == e_bfs.size
+    np.testing.assert_allclose(e_seq, e_bfs)
+
+
+def test_refinement_invariants(synopsis):
+    for hist in synopsis.hists:
+        k = int(hist.k)
+        edges = hist.edges[: k + 1]
+        assert np.all(np.diff(edges) >= 0)
+        assert np.all(hist.h >= 0)
+        assert np.all(hist.u <= np.maximum(hist.h, 1))
+        assert np.all(hist.vmin <= hist.vmax + 1e-12)
+        assert np.all(hist.vmin >= edges[:-1] - 1e-9)
+        assert np.all(hist.vmax <= edges[1:] + 1e-9)
+        assert np.all(hist.cminus <= hist.cplus + 1e-12)
+        assert np.all(hist.cminus >= hist.vmin - 1e-9)
+        assert np.all(hist.cplus <= hist.vmax + 1e-9)
+
+
+def test_pair_invariants(synopsis):
+    for (i, j), pr in synopsis.pairs.items():
+        np.testing.assert_allclose(pr.H.sum(1), pr.hx)
+        np.testing.assert_allclose(pr.H.sum(0), pr.hy)
+        # pair edges are a subset of the union-refined 1-D edges
+        e1 = synopsis.hists[i].edges
+        assert np.all(np.isin(np.round(pr.ex, 9), np.round(e1, 9)))
+        e1j = synopsis.hists[j].edges
+        assert np.all(np.isin(np.round(pr.ey, 9), np.round(e1j, 9)))
+        # fold maps (1-D bin -> pair row) are monotone and in range
+        assert np.all(np.diff(pr.fold_x) >= 0)
+        assert np.all(np.diff(pr.fold_y) >= 0)
+        assert pr.fold_x.shape[0] == int(synopsis.hists[i].k)
+        assert pr.fold_y.shape[0] == int(synopsis.hists[j].k)
+        assert pr.fold_x.max() < int(pr.kx)
+        assert pr.fold_y.max() < int(pr.ky)
+
+
+def test_uniform_data_is_not_split():
+    rng = np.random.default_rng(5)
+    x = rng.integers(0, 1000, 20000).astype(float)
+    crit = chi2lib.build_crit_table(0.001, 128)
+    e = _bfs_edges(x, np.array([x.min(), x.max()]), 200, crit)
+    assert e.size - 1 <= 2  # uniform: essentially no refinement

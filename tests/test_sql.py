@@ -1,0 +1,43 @@
+"""SQL subset parser."""
+import pytest
+
+from repro.core.sql import SQLError, parse_sql
+
+
+def test_basic():
+    q = parse_sql("SELECT AVG(price) FROM t WHERE qty > 3 AND region = 'EU'")
+    assert q.func == "AVG" and q.agg_col == "price" and q.table == "t"
+    assert q.where.kind == "and"
+    assert q.where.children[1].value == "EU"
+
+
+def test_precedence_and_parens():
+    q = parse_sql("SELECT COUNT(x) FROM t WHERE a < 1 OR b > 2 AND c = 3")
+    assert q.where.kind == "or"          # AND binds tighter
+    assert q.where.children[1].kind == "and"
+    q2 = parse_sql("SELECT COUNT(x) FROM t WHERE (a < 1 OR b > 2) AND c = 3")
+    assert q2.where.kind == "and"
+
+
+def test_group_by_and_star():
+    q = parse_sql("SELECT COUNT(*) FROM flights GROUP BY airline;")
+    assert q.agg_col == "*" and q.group_by == "airline"
+
+
+def test_operators():
+    for op in ("=", "!=", "<>", "<", "<=", ">", ">="):
+        q = parse_sql(f"SELECT MIN(v) FROM t WHERE v {op} 1.5e3")
+        want = "!=" if op == "<>" else op
+        assert q.where.op == want
+        assert q.where.value == 1500.0
+
+
+def test_errors():
+    with pytest.raises(SQLError):
+        parse_sql("SELECT FOO(x) FROM t")
+    with pytest.raises(SQLError):
+        parse_sql("SELECT AVG(*) FROM t")
+    with pytest.raises(SQLError):
+        parse_sql("SELECT AVG(x) FROM t WHERE x >")
+    with pytest.raises(SQLError):
+        parse_sql("AVG(x) FROM t")

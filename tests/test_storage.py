@@ -1,0 +1,58 @@
+"""Storage codec: exact round-trip + size accounting."""
+import numpy as np
+
+from repro.core import storage
+from repro.core.query import QueryEngine
+
+
+def test_roundtrip_structural(synopsis):
+    blob = storage.encode(synopsis)
+    ph2 = storage.decode(blob)
+    assert ph2.d == synopsis.d
+    assert ph2.n_rows == synopsis.n_rows
+    for h1, h2 in zip(synopsis.hists, ph2.hists):
+        np.testing.assert_allclose(h1.edges, h2.edges)
+        np.testing.assert_allclose(h1.h, h2.h)
+        np.testing.assert_allclose(h1.u, h2.u)
+        np.testing.assert_allclose(h1.vmin, h2.vmin)
+        np.testing.assert_allclose(h1.vmax, h2.vmax)
+        # re-derived quantities
+        np.testing.assert_allclose(h1.c, h2.c)
+        np.testing.assert_allclose(h1.cminus, h2.cminus, rtol=1e-9)
+        np.testing.assert_allclose(h1.cplus, h2.cplus, rtol=1e-9)
+    for key in synopsis.pairs:
+        p1, p2 = synopsis.pairs[key], ph2.pairs[key]
+        np.testing.assert_allclose(p1.H, p2.H)
+        np.testing.assert_allclose(p1.hx, p2.hx)
+        np.testing.assert_allclose(p1.fold_x, p2.fold_x)
+        np.testing.assert_allclose(p1.fold_y, p2.fold_y)
+
+
+def test_roundtrip_query_identity(synopsis, exact):
+    ph2 = storage.decode(storage.encode(synopsis))
+    e1, e2 = QueryEngine(synopsis), QueryEngine(ph2)
+    for sql in ("SELECT COUNT(c0) FROM t WHERE c1 > 300",
+                "SELECT AVG(c2) FROM t WHERE c1 >= 250 AND c1 < 350",
+                "SELECT MEDIAN(c1) FROM t WHERE c2 > 600"):
+        r1, r2 = e1.query(sql), e2.query(sql)
+        np.testing.assert_allclose(r1.as_tuple(), r2.as_tuple(), rtol=1e-9)
+
+
+def test_size_is_compact(synopsis):
+    rep = storage.synopsis_size_report(synopsis)
+    assert rep["total"] < 1_000_000          # sub-MB (paper claim band)
+    assert rep["total"] < 0.05 * synopsis.n_sampled * synopsis.d * 8
+    # within 1.5x of the paper's Eq. 12 bound on integer data
+    assert rep["total"] <= 1.5 * rep["eq12_bound"]
+
+
+def test_counts_sparse_vs_dense_selection():
+    from repro.core.storage import BitWriter, _encode_counts, _decode_counts, BitReader
+    dense = np.ones((40, 40))
+    sparse = np.zeros((40, 40))
+    sparse[3, 7] = 9
+    for mat in (dense, sparse):
+        w = BitWriter()
+        _encode_counts(w, mat)
+        out = _decode_counts(BitReader(w.getvalue()), mat.shape)
+        np.testing.assert_allclose(out, mat)

@@ -1,0 +1,118 @@
+"""Training loop: resume determinism, corruption recovery, compression,
+telemetry."""
+import dataclasses
+import os
+import shutil
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.train.loop import InjectedFailure, train
+from repro.train.optimizer import Hyper
+
+
+def _cfg():
+    return dataclasses.replace(get_config("qwen3-0.6b", smoke=True),
+                               dtype="float32")
+
+
+HYPER = Hyper(lr=1e-3, warmup_steps=5, total_steps=40)
+
+
+def test_crash_resume_bitwise_identical(tmp_path):
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    s1, h1 = train(_cfg(), HYPER, steps=12, batch=4, seq=64, ckpt_dir=d1,
+                   ckpt_every=4, verbose=False)
+    with pytest.raises(InjectedFailure):
+        train(_cfg(), HYPER, steps=12, batch=4, seq=64, ckpt_dir=d2,
+              ckpt_every=4, fail_at_step=7, verbose=False)
+    s2, h2 = train(_cfg(), HYPER, steps=12, batch=4, seq=64, ckpt_dir=d2,
+                   ckpt_every=4, verbose=False)
+    assert int(s1.step) == int(s2.step) == 12
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corrupt_checkpoint_skip_back(tmp_path):
+    d = str(tmp_path / "c")
+    train(_cfg(), HYPER, steps=8, batch=4, seq=64, ckpt_dir=d, ckpt_every=3,
+          verbose=False)
+    from repro.ckpt.checkpoint import CheckpointManager
+    mgr = CheckpointManager(d)
+    steps = mgr.all_steps()
+    assert len(steps) >= 2
+    # Corrupt the newest checkpoint's first array file.
+    newest = os.path.join(d, f"step_{steps[-1]:010d}")
+    victim = next(f for f in os.listdir(newest) if f.endswith(".npy"))
+    with open(os.path.join(newest, victim), "r+b") as fh:
+        fh.seek(100)
+        fh.write(b"\xde\xad\xbe\xef")
+    from repro.train.step import init_train_state
+    like = init_train_state(_cfg(), jax.random.PRNGKey(0))
+    step, state = mgr.restore(like)
+    assert step == steps[-2]  # skipped back past the corrupt one
+
+
+def test_loss_decreases(tmp_path):
+    _, hist = train(_cfg(), HYPER, steps=30, batch=8, seq=64,
+                    ckpt_dir=str(tmp_path / "d"), ckpt_every=100,
+                    verbose=False)
+    first = np.mean(hist["loss"][:5])
+    last = np.mean(hist["loss"][-5:])
+    assert last < first - 0.2
+
+
+def test_grad_compression_error_feedback_converges(tmp_path):
+    from repro.train.grad_compress import GDQuantizer
+    _, hist = train(_cfg(), HYPER, steps=30, batch=8, seq=64,
+                    ckpt_dir=str(tmp_path / "e"), ckpt_every=100,
+                    compressor=GDQuantizer(bits=8), verbose=False)
+    first = np.mean(hist["loss"][:5])
+    last = np.mean(hist["loss"][-5:])
+    assert last < first - 0.2  # compression must not break convergence
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    import jax.numpy as jnp
+    from repro.train.step import init_train_state, make_train_step
+    from repro.data.pipeline import TokenPipeline
+    cfg = _cfg()
+    pipe = TokenPipeline(cfg.vocab, 8, 64, seed=1)
+    batch = pipe.host_slice(0)
+    s0 = init_train_state(cfg, jax.random.PRNGKey(0))
+    full = jax.jit(make_train_step(cfg, HYPER, microbatches=1))
+    micro = jax.jit(make_train_step(cfg, HYPER, microbatches=4))
+    s1, m1 = full(s0, batch)
+    s2, m2 = micro(s0, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_telemetry_aqp_queries():
+    from repro.train.telemetry import TelemetryStore
+    from repro.core.types import BuildParams
+    rng = np.random.default_rng(0)
+    tel = TelemetryStore(BuildParams(n_samples=5000))
+    for step in range(5000):
+        host = f"host{step % 4}"
+        base = 0.1 if host != "host3" else 0.25   # host3 is a straggler
+        tel.record(step=step, loss=3.0 - step * 1e-4,
+                   grad_norm=float(rng.random()),
+                   step_time=base + rng.random() * 0.01, host=host)
+    res = tel.query("SELECT AVG(step_time) FROM t WHERE host = 'host3'")
+    assert abs(res.estimate - 0.255) < 0.01
+    # loss is a *deterministic uniform* function of step: both marginals are
+    # uniform, so the paper's per-dimension uniformity test never splits the
+    # pair — a structural blind spot of RefineBin2D (DESIGN.md §7.6). The
+    # estimate degrades gracefully to ~8% instead of <1%.
+    res2 = tel.query("SELECT AVG(loss) FROM t WHERE step > 4000")
+    exact2 = 3.0 - 4500 * 1e-4
+    assert abs(res2.estimate - exact2) / exact2 < 0.12
+    stragglers = tel.straggler_report()
+    assert "host3" in stragglers
