@@ -15,6 +15,7 @@ updated immediately; synopsis marked stale and rebuilt lazily) — the paper's
 """
 from __future__ import annotations
 
+import itertools
 import time
 
 import numpy as np
@@ -28,6 +29,12 @@ from repro.gd.preprocess import preprocess_table
 
 
 class AQPFramework:
+    # Process-global epoch sequence: epochs are unique across *all*
+    # frameworks, so a serving cache entry tagged with one framework's epoch
+    # can never validate against a different framework that replaced it
+    # under the same catalog name (same-value collision is impossible).
+    _epoch_seq = itertools.count(1)
+
     def __init__(self, params: BuildParams | None = None,
                  use_compression: bool = True, fastpath=None):
         self.params = params or BuildParams()
@@ -40,6 +47,35 @@ class AQPFramework:
         self.engine = None
         self._raw_batches = []
         self.timings = {}
+        # Serving-layer integration: ``epoch`` bumps whenever the queryable
+        # state changes (ingest / append_rows / rebuild), so plan/result
+        # caches keyed on it can never serve stale answers; callbacks let a
+        # catalog purge eagerly.
+        self.epoch = 0
+        self._invalidate_cbs = []
+
+    # ------------------------------------------------------- staleness hooks
+
+    @property
+    def is_stale(self) -> bool:
+        return self.engine is None
+
+    def on_invalidate(self, callback):
+        """Register ``callback(framework)`` to fire on every epoch bump."""
+        self._invalidate_cbs.append(callback)
+
+    def off_invalidate(self, callback):
+        """Detach a callback registered with ``on_invalidate`` (no-op if
+        absent) — e.g. when a serving catalog replaces this framework."""
+        try:
+            self._invalidate_cbs.remove(callback)
+        except ValueError:
+            pass
+
+    def _bump_epoch(self):
+        self.epoch = next(AQPFramework._epoch_seq)
+        for cb in list(self._invalidate_cbs):
+            cb(self)
 
     # -------------------------------------------------------------- ingest
 
@@ -59,6 +95,7 @@ class AQPFramework:
         self.engine = QueryEngine(self.synopsis, fastpath=self.fastpath)
         self.timings = {"preprocess_s": t1 - t0, "compress_s": t2 - t1,
                         "build_synopsis_s": t3 - t2}
+        self._bump_epoch()
         return self
 
     def append_rows(self, table: dict):
@@ -67,6 +104,7 @@ class AQPFramework:
         self._raw_batches.append(table)
         self.synopsis = None
         self.engine = None
+        self._bump_epoch()
 
     def _ensure_fresh(self):
         if self.engine is None:

@@ -32,7 +32,8 @@ def _literal(rng, col):
 def generate_queries(table: dict, n_queries: int, seed: int = 0,
                      aggs=AGGS_FULL, max_preds: int = 5,
                      min_selectivity: float = 1e-5,
-                     max_tries_factor: int = 30) -> list[str]:
+                     max_tries_factor: int = 30,
+                     table_name: str = "t") -> list[str]:
     rng = np.random.default_rng(seed)
     exact = ExactEngine(table)
     names = list(table.keys())
@@ -60,7 +61,7 @@ def generate_queries(table: dict, n_queries: int, seed: int = 0,
         where = conds[0]
         for g, c in zip(glue, conds[1:]):
             where += g + c
-        sql = f"SELECT {func}({agg_col}) FROM t WHERE {where}"
+        sql = f"SELECT {func}({agg_col}) FROM {table_name} WHERE {where}"
         try:
             if exact.selectivity(sql) < min_selectivity:
                 continue

@@ -5,6 +5,12 @@ divide) plus a combine — at sub-ms latencies the launch/dispatch overhead
 dominates. This path stacks all AND-ed predicates of a query and executes
 ONE fused kernel per bound variant (estimate / lower / upper).
 
+``FastPath`` additionally exposes a *query-batched* entry (``batch``): a
+group of queries sharing a plan shape (same agg column, same pair-predicate
+column set) executes as ONE launch covering every query and all three bound
+variants — the serving-layer analogue of the per-predicate fusion, used by
+``repro.serve.aqp.scheduler.BatchScheduler``.
+
 Supported: AND trees of leaves (the dominant template in the paper's
 workload). OR / nested trees return None -> engine falls back to the NumPy
 reference path (repro.core.weightings), which is also the oracle in tests.
@@ -15,24 +21,11 @@ import numpy as np
 
 from repro.core import coverage as covlib
 from repro.core import weightings as wlib
-from repro.kernels.weightings import fused_weightings
+from repro.kernels.weightings import batched_weightings, fused_weightings
 
 Z_98 = wlib.Z_98
 
-
-def _flat_and_leaves(tree):
-    """Tree -> list of Leaf/Consolidated if it is a pure AND tree, else None."""
-    if isinstance(tree, (wlib.Leaf, wlib.Consolidated)):
-        return [tree]
-    if isinstance(tree, wlib.Node) and tree.kind == "and":
-        out = []
-        for ch in tree.children:
-            sub = _flat_and_leaves(ch)
-            if sub is None:
-                return None
-            out.extend(sub)
-        return out
-    return None
+_flat_and_leaves = wlib.flat_and_leaves  # back-compat alias
 
 
 def _slice_beta(ph, leaf, h, u, vmin, vmax, mu):
@@ -49,20 +42,53 @@ def _round_up(x: int, mult: int = 128) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
-def make_fastpath(use_pallas: bool = True):
-    """Returns the engine hook: (ph, agg_col, tree, corrected) -> w-triple.
+def _widen_clip(w, wlo, whi, ph, h, corrected):
+    """Eq. 29 sampling widening + monotone clipping (same as the reference
+    path). Broadcasts over leading batch dimensions: w/wlo/whi are (..., K1),
+    h is (K1,)."""
+    rho = ph.rho
+    if rho < 1.0:
+        fpc = (ph.n_rows - ph.n_sampled) / max(ph.n_rows - 1, 1)
+        blo = np.divide(wlo, h, out=np.zeros_like(wlo), where=h > 0)
+        bhi = np.divide(whi, h, out=np.zeros_like(whi), where=h > 0)
+        var_lo = blo * (1.0 - blo) * fpc
+        var_hi = bhi * (1.0 - bhi) * fpc
+        if corrected:
+            var_lo, var_hi = var_lo * h, var_hi * h
+        wlo = wlo - Z_98 * np.sqrt(np.maximum(var_lo, 0.0))
+        whi = whi + Z_98 * np.sqrt(np.maximum(var_hi, 0.0))
+    wlo = np.clip(wlo, 0.0, w)
+    whi = np.clip(whi, w, h)
+    return w, wlo, whi
+
+
+class FastPath:
+    """Engine hook: (ph, agg_col, tree, corrected) -> weightings triple.
 
     The padded (H, fold) stacks depend only on (agg column, predicate
     columns), NOT on the query literals — they are device-resident constants
     of the synopsis. We cache them per column set (on TPU they'd simply stay
     in HBM/VMEM); per query only the tiny beta vectors are assembled.
     """
-    stack_cache: dict = {}
 
-    def get_stack(ph, agg_col, pred_cols):
-        key = (id(ph), agg_col, pred_cols)
-        if key in stack_cache:
-            return stack_cache[key]
+    def __init__(self, use_pallas: bool = True):
+        self.use_pallas = use_pallas
+
+    # ----------------------------------------------------------- shared stacks
+
+    def _get_stack(self, ph, agg_col, pred_cols):
+        # The stack cache lives ON the synopsis object: its lifetime is
+        # exactly the synopsis's (a rebuild produces a new PairwiseHist, so
+        # stale stacks can never be served and the old device arrays are
+        # garbage-collected with the old synopsis). Keying an external dict
+        # on id(ph) would leak per rebuild and could alias a recycled id.
+        cache = getattr(ph, "_fastpath_stacks", None)
+        if cache is None:
+            cache = {}
+            ph._fastpath_stacks = cache
+        key = (agg_col, pred_cols)
+        if key in cache:
+            return cache[key]
         hist = ph.hists[agg_col]
         k1 = int(hist.k)
         prs = [ph.pair(agg_col, j) for j in pred_cols]
@@ -82,17 +108,16 @@ def make_fastpath(use_pallas: bool = True):
         import jax.numpy as jnp
         entry = (jnp.asarray(hpad), jnp.asarray(fpad), jnp.asarray(hxpad),
                  k1, k2max)
-        stack_cache[key] = entry
+        cache[key] = entry
         return entry
 
-    def fastpath(ph, agg_col, tree, corrected):
-        leaves = _flat_and_leaves(tree)
+    def _split_leaves(self, ph, agg_col, tree):
+        """Pure-AND tree -> (same-col beta triples, pair leaves) or None."""
+        leaves = wlib.flat_and_leaves(tree)
         if leaves is None:
-            return None  # OR / nested: NumPy reference path
+            return None
         hist = ph.hists[agg_col]
-        k1 = int(hist.k)
-
-        same_col = [[], [], []]   # product of (k1,) probs for j == agg_col
+        same_col = [[], [], []]   # per variant: (k1,) probs for j == agg_col
         pair_leaves = []
         for leaf in leaves:
             if leaf.col == agg_col:
@@ -102,49 +127,113 @@ def make_fastpath(use_pallas: bool = True):
                     same_col[idx].append(np.clip(triple[idx], 0.0, 1.0))
             else:
                 pair_leaves.append(leaf)
+        # Canonical (sorted-column) leaf order: the single and batched paths
+        # then share one cached stack per column set regardless of the order
+        # predicates appeared in the WHERE clause.
+        pair_leaves.sort(key=lambda lf: lf.col)
+        return same_col, pair_leaves
+
+    def _pair_betas(self, ph, agg_col, pair_leaves, k2max):
+        """(3, L, K2max) coverage matrix for one query's pair leaves."""
+        el = len(pair_leaves)
+        betas = np.zeros((3, el, k2max), np.float32)
+        for li, leaf in enumerate(pair_leaves):
+            pr = ph.pair(agg_col, leaf.col)
+            triple = _slice_beta(ph, leaf, pr.hy, pr.uy, pr.vminy,
+                                 pr.vmaxy, ph.columns[leaf.col].mu)
+            for idx in range(3):
+                betas[idx, li, :len(triple[idx])] = triple[idx]
+        return betas
+
+    # ------------------------------------------------------------ single query
+
+    def __call__(self, ph, agg_col, tree, corrected):
+        split = self._split_leaves(ph, agg_col, tree)
+        if split is None:
+            return None  # OR / nested: NumPy reference path
+        same_col, pair_leaves = split
+        hist = ph.hists[agg_col]
+        h = np.asarray(hist.h, np.float64)
 
         outs = []
         if pair_leaves:
             pred_cols = tuple(lf.col for lf in pair_leaves)
-            hpad, fpad, hxpad, k1c, k2max = get_stack(ph, agg_col, pred_cols)
-            el = len(pair_leaves)
-            betas = [np.zeros((el, k2max), np.float32) for _ in range(3)]
-            for li, leaf in enumerate(pair_leaves):
-                pr = ph.pair(agg_col, leaf.col)
-                triple = _slice_beta(ph, leaf, pr.hy, pr.uy, pr.vminy,
-                                     pr.vmaxy, ph.columns[leaf.col].mu)
-                for idx in range(3):
-                    betas[idx][li, :len(triple[idx])] = triple[idx]
+            hpad, fpad, hxpad, k1c, k2max = self._get_stack(
+                ph, agg_col, pred_cols)
+            betas = self._pair_betas(ph, agg_col, pair_leaves, k2max)
             for idx in range(3):
                 prob1 = np.asarray(fused_weightings(
                     hpad, betas[idx], fpad, hxpad,
-                    use_pallas=use_pallas))[:k1]
-                w = np.asarray(hist.h, np.float64) * prob1
+                    use_pallas=self.use_pallas))[:k1c]
+                w = h * prob1
                 for prob in same_col[idx]:
                     w = w * prob
                 outs.append(np.asarray(w, np.float64))
         else:
             for idx in range(3):
-                w = np.asarray(hist.h, np.float64).copy()
+                w = h.copy()
                 for prob in same_col[idx]:
                     w = w * prob
                 outs.append(w)
         w, wlo, whi = outs
+        return _widen_clip(w, wlo, whi, ph, h, corrected)
 
-        rho = ph.rho
-        if rho < 1.0:  # Eq. 29 widening (same as the reference path)
-            fpc = (ph.n_rows - ph.n_sampled) / max(ph.n_rows - 1, 1)
-            h = np.asarray(hist.h, np.float64)
-            blo = np.divide(wlo, h, out=np.zeros_like(wlo), where=h > 0)
-            bhi = np.divide(whi, h, out=np.zeros_like(whi), where=h > 0)
-            var_lo = blo * (1.0 - blo) * fpc
-            var_hi = bhi * (1.0 - bhi) * fpc
-            if corrected:
-                var_lo, var_hi = var_lo * h, var_hi * h
-            wlo = wlo - Z_98 * np.sqrt(np.maximum(var_lo, 0.0))
-            whi = whi + Z_98 * np.sqrt(np.maximum(var_hi, 0.0))
-        wlo = np.clip(wlo, 0.0, w)
-        whi = np.clip(whi, w, np.asarray(hist.h, np.float64))
-        return w, wlo, whi
+    # ------------------------------------------------------------- query batch
 
-    return fastpath
+    def batch(self, ph, agg_col, trees, corrected):
+        """One fused launch for B same-shape queries (x3 bound variants).
+
+        Every tree must be a pure AND with an identical pair-predicate column
+        *set* (same-column leaves are free to differ — they apply as
+        elementwise products outside the kernel). Returns a list of
+        (w, wlo, whi) triples aligned with ``trees``, or None if any tree is
+        ineligible (caller falls back to per-query execution).
+        """
+        splits = []
+        pair_cols = None
+        for tree in trees:
+            split = self._split_leaves(ph, agg_col, tree)
+            if split is None:
+                return None
+            same_col, pair_leaves = split
+            cols = tuple(lf.col for lf in pair_leaves)   # already sorted
+            if len(set(cols)) != len(cols):
+                return None  # duplicate pair col: un-consolidated shape
+            if pair_cols is None:
+                pair_cols = cols
+            elif cols != pair_cols:
+                return None
+            splits.append((same_col, pair_leaves))
+
+        hist = ph.hists[agg_col]
+        h = np.asarray(hist.h, np.float64)
+        nq = len(splits)
+
+        if pair_cols:
+            hpad, fpad, hxpad, k1c, k2max = self._get_stack(
+                ph, agg_col, pair_cols)
+            betas = np.stack([self._pair_betas(ph, agg_col, pls, k2max)
+                              for _, pls in splits])        # (B, 3, L, K2)
+            flat = betas.reshape(nq * 3, len(pair_cols), k2max)
+            prob1 = np.asarray(batched_weightings(
+                hpad, flat, fpad, hxpad,
+                use_pallas=self.use_pallas))[:, :k1c]
+            prob1 = prob1.reshape(nq, 3, k1c)               # (B, 3, K1)
+        else:
+            prob1 = np.ones((nq, 3, int(hist.k)))
+
+        out = []
+        for qi, (same_col, _) in enumerate(splits):
+            triple = []
+            for idx in range(3):
+                w = h * np.asarray(prob1[qi, idx], np.float64)
+                for prob in same_col[idx]:
+                    w = w * prob
+                triple.append(w)
+            out.append(_widen_clip(*triple, ph, h, corrected))
+        return out
+
+
+def make_fastpath(use_pallas: bool = True) -> FastPath:
+    """Returns the engine hook (kept for back-compat; now a FastPath)."""
+    return FastPath(use_pallas=use_pallas)

@@ -39,6 +39,52 @@ class PlanError(ValueError):
     pass
 
 
+@dataclasses.dataclass
+class QueryPlan:
+    """A planned query: encoded/consolidated predicate tree + resolved columns.
+
+    Plans depend only on the SQL text and the synopsis metadata (column
+    encodings, consolidation grids), not on the histogram counts, so they are
+    reusable across executions and cacheable by the serving layer as long as
+    the synopsis generation ("epoch") is unchanged.
+    """
+
+    func: str                 # aggregation function
+    agg_col: int | None       # None for COUNT(*)
+    tree: object              # Leaf | Consolidated | Node | None
+    group_by: int | None
+    table: str | None = None  # FROM clause (resolved by the serving catalog)
+    exec_col: int | None = None  # column whose weightings drive execution
+
+    def and_leaves(self):
+        """Leaves of a pure-AND tree, or None (OR / no WHERE)."""
+        if self.tree is None:
+            return None
+        return wlib.flat_and_leaves(self.tree)
+
+    def shape_key(self):
+        """Batch-execution plan shape: (exec_col, sorted pair-predicate cols).
+
+        Queries sharing a shape key can execute as one fused batched kernel
+        launch (the padded H/fold stacks depend only on the column set).
+        Returns None when this plan is not batchable: GROUP BY, no WHERE,
+        OR/nested trees, or duplicate pair-column leaves.
+        """
+        if self.group_by is not None or self.exec_col is None:
+            return None
+        leaves = self.and_leaves()
+        if leaves is None:
+            return None
+        pair_cols = set()
+        for leaf in leaves:
+            if leaf.col == self.exec_col:
+                continue
+            if leaf.col in pair_cols:   # un-consolidated duplicate: fall back
+                return None
+            pair_cols.add(leaf.col)
+        return (self.exec_col, tuple(sorted(pair_cols)))
+
+
 class QueryEngine:
     """Executes the paper's query templates against a PairwiseHist synopsis."""
 
@@ -53,11 +99,34 @@ class QueryEngine:
     # ------------------------------------------------------------------ API
 
     def query(self, sql_text: str) -> QueryResult:
-        q = sqlmod.parse_sql(sql_text)
+        return self.execute_plan(self.plan_sql(sql_text))
+
+    def plan_sql(self, sql_text: str) -> QueryPlan:
+        return self.plan_query(sqlmod.parse_sql(sql_text))
+
+    def plan_query(self, q: sqlmod.ParsedQuery) -> QueryPlan:
+        """Parsed query -> reusable QueryPlan (encode + consolidate)."""
         tree = self._plan(q.where)
         agg_col = None if q.agg_col == "*" else self.ph.col_index(q.agg_col)
         gcol = None if q.group_by is None else self.ph.col_index(q.group_by)
-        return self.execute(q.func, agg_col, tree, group_by=gcol)
+        exec_col = agg_col
+        if agg_col is None and tree is not None:   # COUNT(*) with WHERE
+            exec_col = min(self._tree_cols(tree, set()))
+        return QueryPlan(q.func, agg_col, tree, gcol, q.table, exec_col)
+
+    def execute_plan(self, plan: QueryPlan,
+                     weightings=None) -> QueryResult:
+        """Execute a plan; ``weightings`` optionally supplies a precomputed
+        (w, wlo, whi) triple (e.g. from a fused batched kernel launch)."""
+        t0 = time.perf_counter()
+        if plan.group_by is not None:
+            result = self._group_by(plan.func, plan.agg_col, plan.tree,
+                                    plan.group_by)
+        else:
+            result = self._single(plan.func, plan.agg_col, plan.tree,
+                                  w_triple=weightings)
+        result.latency_s = time.perf_counter() - t0
+        return result
 
     def execute(self, func: str, agg_col: int | None, tree,
                 group_by: int | None = None) -> QueryResult:
@@ -173,7 +242,7 @@ class QueryEngine:
         return wlib.weightings(self.ph, agg_col, tree,
                                corrected_sampling_bounds=self.corrected)
 
-    def _single(self, func, agg_col, tree) -> QueryResult:
+    def _single(self, func, agg_col, tree, w_triple=None) -> QueryResult:
         ph = self.ph
         if agg_col is None:  # COUNT(*)
             if tree is None:
@@ -182,7 +251,8 @@ class QueryEngine:
             agg_col = min(self._tree_cols(tree, set()))
         hist = ph.hists[agg_col]
         col = ph.columns[agg_col]
-        w, wlo, whi = self._weightings(agg_col, tree)
+        w, wlo, whi = (w_triple if w_triple is not None
+                       else self._weightings(agg_col, tree))
         rho = ph.rho
 
         if func == "COUNT":

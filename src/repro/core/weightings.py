@@ -56,6 +56,25 @@ class Node:
     children: list
 
 
+def flat_and_leaves(tree):
+    """Tree -> list of Leaf/Consolidated if it is a pure AND tree, else None.
+
+    Pure AND trees are the batchable/fusable plan shape (repro.core.fastpath
+    and the serving BatchScheduler); OR/nested trees evaluate via eval_tree.
+    """
+    if isinstance(tree, (Leaf, Consolidated)):
+        return [tree]
+    if isinstance(tree, Node) and tree.kind == "and":
+        out = []
+        for ch in tree.children:
+            sub = flat_and_leaves(ch)
+            if sub is None:
+                return None
+            out.extend(sub)
+        return out
+    return None
+
+
 # ---------------------------------------------------------------------------
 # Leaf probabilities
 # ---------------------------------------------------------------------------

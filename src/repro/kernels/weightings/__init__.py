@@ -1,1 +1,2 @@
-from repro.kernels.weightings.ops import fused_weightings  # noqa: F401
+from repro.kernels.weightings.ops import (batched_weightings,  # noqa: F401
+                                          fused_weightings)

@@ -3,9 +3,12 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.weightings.ref import fused_weightings_ref
-from repro.kernels.weightings.weightings import fused_weightings_pallas
+from repro.kernels.weightings.ref import (batched_weightings_ref,
+                                          fused_weightings_ref)
+from repro.kernels.weightings.weightings import (batched_weightings_pallas,
+                                                 fused_weightings_pallas)
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -13,6 +16,7 @@ def _round_up(x: int, mult: int) -> int:
 
 
 _ref_jit = jax.jit(fused_weightings_ref)
+_batched_ref_jit = jax.jit(batched_weightings_ref)
 
 
 def fused_weightings(h_stack, beta, fold, hx, *, use_pallas: bool = True,
@@ -43,3 +47,48 @@ def fused_weightings(h_stack, beta, fold, hx, *, use_pallas: bool = True,
     out = fused_weightings_pallas(h_stack, beta, fold, hx,
                                   interpret=bool(interpret))
     return out[:k1]
+
+
+def batched_weightings(h_stack, beta, fold, hx, *, use_pallas: bool = True,
+                       interpret: bool | None = None):
+    """Query-batched fused weightings: beta (Q, L, K2) -> (Q, K1).
+
+    See ref.batched_weightings_ref for semantics. Q is bucketed to a power
+    of two (min 8): serving waves produce arbitrary group sizes, and a jit
+    recompile per size would dwarf the launch being amortized; K1/K2 pad to
+    128-lane multiples. Padding is value-safe: padded beta rows produce
+    garbage rows that are sliced away; padded K entries are zero.
+
+    ``beta`` is per-wave host data and is padded in NumPy (one device
+    transfer, no dispatched pad ops on the hot path); the shared
+    h/fold/hx stacks should already be device-resident and 128-padded
+    (``FastPath._get_stack``) — if not, they are padded here once.
+    """
+    beta = np.asarray(beta, np.float32)
+    q, el, k2 = beta.shape
+    k1 = fold.shape[1]
+    qp = max(8, 1 << (q - 1).bit_length())
+    k2p = _round_up(k2, 128)
+    k1p = _round_up(k1, 128)
+    if use_pallas and interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    h_stack = jnp.asarray(h_stack, jnp.float32)
+    fold = jnp.asarray(fold, jnp.float32)
+    hx = jnp.asarray(hx, jnp.float32)
+    pad_k = (k2p, k1p) != (k2, k1) and use_pallas
+    if pad_k:
+        h_stack = jnp.pad(h_stack, ((0, 0), (0, k2p - k2), (0, k2p - k2)))
+        hx = jnp.pad(hx, ((0, 0), (0, k2p - k2)))
+        fold = jnp.pad(fold, ((0, 0), (0, k1p - k1), (0, k2p - k2)))
+
+    if not use_pallas:
+        bpad = np.zeros((qp, el, k2), np.float32)
+        bpad[:q] = beta
+        return _batched_ref_jit(h_stack, jnp.asarray(bpad), fold, hx)[:q]
+
+    bpad = np.zeros((el, qp, k2p), np.float32)
+    bpad[:, :q, :k2] = np.swapaxes(beta, 0, 1)
+    out = batched_weightings_pallas(h_stack, jnp.asarray(bpad), fold, hx,
+                                    interpret=bool(interpret))
+    return out[:q, :k1]

@@ -40,6 +40,54 @@ def _kernel(h_ref, beta_ref, hx_ref, fold_ref, out_ref):
     out_ref[...] *= p1
 
 
+def _batched_kernel(h_ref, beta_ref, hx_ref, fold_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.ones_like(out_ref)
+
+    hmat = h_ref[0]                        # (K2, K2)
+    beta = beta_ref[0]                     # (Q, K2)
+    hx = hx_ref[0]                         # (1, K2)
+    fold = fold_ref[0]                     # (K1, K2)
+    v = jax.lax.dot_general(beta, hmat, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, K2)
+    p_row = jnp.clip(v / jnp.maximum(hx, 1e-30), 0.0, 1.0)
+    p1 = jax.lax.dot_general(p_row, fold, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, K1)
+    out_ref[...] *= p1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_weightings_pallas(h_stack, beta, fold, hx, interpret: bool = True):
+    """Query-batched variant: one launch for a whole plan-shape group.
+
+    h_stack (L,K2,K2) f32, beta (L,Q,K2), fold (L,K1,K2), hx (L,K2).
+    Returns (Q, K1): per-query prod_l fold_l(clip(H_l beta_ql / hx_l, 0, 1)).
+
+    Same grid walk as the single-query kernel (one step per predicate), but
+    the mat-vec becomes a (Q,K2)x(K2,K2) matmul — the MXU amortizes per-query
+    dispatch exactly as the single-query kernel amortizes per-predicate ops.
+    The (Q,K1) accumulator stays resident in VMEM across the grid.
+    """
+    el, k2, _ = h_stack.shape
+    q = beta.shape[1]
+    k1 = fold.shape[1]
+    hx2 = hx[:, None, :]                   # (L, 1, K2)
+    return pl.pallas_call(
+        _batched_kernel,
+        grid=(el,),
+        in_specs=[
+            pl.BlockSpec((1, k2, k2), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, q, k2), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, 1, k2), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, k1, k2), lambda l: (l, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((q, k1), lambda l: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, k1), jnp.float32),
+        interpret=interpret,
+    )(h_stack, beta, hx2, fold)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fused_weightings_pallas(h_stack, beta, fold, hx, interpret: bool = True):
     """h_stack (L,K2,K2) f32, beta (L,K2), fold (L,K1,K2), hx (L,K2).

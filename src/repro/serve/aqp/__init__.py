@@ -1,0 +1,8 @@
+# Multi-table AQP serving subsystem: catalog + batch scheduler + caches +
+# telemetry. Turns the single-table AQPFramework into a multi-tenant query
+# server whose hot path is one fused kernel launch per plan-shape group.
+from repro.serve.aqp.cache import LRUCache, normalize_sql  # noqa: F401
+from repro.serve.aqp.catalog import TableCatalog  # noqa: F401
+from repro.serve.aqp.metrics import Metrics, TableMetrics  # noqa: F401
+from repro.serve.aqp.scheduler import BatchScheduler  # noqa: F401
+from repro.serve.aqp.server import AQPServer  # noqa: F401

@@ -1,0 +1,104 @@
+"""LRU plan / result caches for the AQP serving layer.
+
+Entries are keyed on *normalized* SQL text and tagged with the owning
+table's epoch (``AQPFramework.epoch``); a lookup whose stored epoch differs
+from the table's current epoch is a miss — appended rows can never be
+answered from a stale cached result. ``purge_table`` additionally evicts
+eagerly (wired to ``AQPFramework.on_invalidate`` by the server) so stale
+entries do not linger holding memory.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import re
+
+_QUOTED_RE = re.compile(r"('[^']*'|\"[^\"]*\")")
+
+
+def normalize_sql(text: str) -> str:
+    """Canonical cache key: collapse whitespace, drop a trailing semicolon.
+
+    Quoted string literals are preserved verbatim (``'New  York'`` keeps its
+    double space — the server parses the *normalized* text, so literal
+    content must survive normalization); identifier/literal case is
+    preserved too. Only insignificant layout outside quotes is collapsed,
+    so ``SELECT COUNT(*)  FROM t ;`` and ``SELECT COUNT(*) FROM t`` share
+    one cache slot.
+    """
+    parts = _QUOTED_RE.split(text.strip())
+    parts[-1] = parts[-1].rstrip().rstrip(";")   # always outside quotes
+    out = [part if i % 2 else " ".join(part.split())
+           for i, part in enumerate(parts)]
+    return " ".join(p for p in out if p)
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    table: str
+    epoch: int
+    value: object
+
+
+class LRUCache:
+    """Plain LRU over normalized-SQL keys with epoch validation + stats."""
+
+    def __init__(self, capacity: int = 1024):
+        self.capacity = int(capacity)
+        self._data: collections.OrderedDict[str, CacheEntry] = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.table_hits: collections.Counter = collections.Counter()
+        self.table_misses: collections.Counter = collections.Counter()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def get(self, key: str, epoch_of) -> CacheEntry | None:
+        """Validated lookup. ``epoch_of(table) -> int`` supplies the current
+        epoch; entries from older epochs are evicted silently. Miss
+        accounting is the caller's job (one ``miss()`` per failed lookup,
+        once the key's table is known) so a stale entry is not double
+        counted."""
+        entry = self._data.get(key)
+        if entry is not None and entry.epoch == epoch_of(entry.table):
+            self._data.move_to_end(key)
+            self.hits += 1
+            self.table_hits[entry.table] += 1
+            return entry
+        if entry is not None:   # stale epoch: evict; caller records the miss
+            del self._data[key]
+        return None
+
+    def miss(self, table: str | None = None):
+        self.misses += 1
+        if table is not None:
+            self.table_misses[table] += 1
+
+    def put(self, key: str, table: str, epoch: int, value):
+        if self.capacity <= 0:
+            return
+        self._data[key] = CacheEntry(table, epoch, value)
+        self._data.move_to_end(key)
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+
+    def purge_table(self, table: str):
+        """Eagerly drop every entry belonging to ``table``."""
+        dead = [k for k, e in self._data.items() if e.table == table]
+        for k in dead:
+            del self._data[k]
+
+    def clear(self):
+        self._data.clear()
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {"size": len(self._data), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate}

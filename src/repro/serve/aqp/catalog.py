@@ -1,0 +1,76 @@
+"""Table catalog: named multi-table registry for the AQP server.
+
+``core/sql.py`` has always parsed ``FROM <table>`` but nothing resolved the
+name — the single-table engines just ignored it. The catalog closes that
+gap: queries against unregistered tables raise ``PlanError`` with the list
+of known tables, and each registered ``AQPFramework`` reports its staleness
+epoch for cache invalidation.
+"""
+from __future__ import annotations
+
+from repro.aqp.engine import AQPFramework
+from repro.core.query import PlanError
+from repro.core.types import BuildParams
+
+
+class TableCatalog:
+    """name -> AQPFramework registry with staleness-epoch bookkeeping."""
+
+    def __init__(self):
+        self._tables: dict[str, AQPFramework] = {}
+
+    # ------------------------------------------------------------ registration
+
+    def register(self, name: str, framework: AQPFramework) -> AQPFramework:
+        """Register an (already ingested or to-be-ingested) framework."""
+        self._tables[name] = framework
+        return framework
+
+    def register_table(self, name: str, table: dict,
+                       params: BuildParams | None = None,
+                       use_compression: bool = True,
+                       fastpath=None) -> AQPFramework:
+        """Convenience: build + ingest a framework from a raw column dict."""
+        fw = AQPFramework(params=params, use_compression=use_compression,
+                          fastpath=fastpath)
+        fw.ingest(table)
+        return self.register(name, fw)
+
+    def unregister(self, name: str):
+        self._tables.pop(name, None)
+
+    # -------------------------------------------------------------- resolution
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._tables
+
+    def __len__(self) -> int:
+        return len(self._tables)
+
+    def tables(self) -> list[str]:
+        return sorted(self._tables)
+
+    def resolve(self, name: str) -> AQPFramework:
+        try:
+            return self._tables[name]
+        except KeyError:
+            raise PlanError(
+                f"unknown table {name!r}; registered tables: "
+                f"{self.tables()}") from None
+
+    def engine(self, name: str):
+        """Fresh QueryEngine for ``name``; raises RuntimeError if the
+        synopsis is stale (append_rows without rebuild)."""
+        fw = self.resolve(name)
+        if fw.engine is None:
+            raise RuntimeError(
+                f"table {name!r}: synopsis is stale after append_rows; "
+                "call rebuild() first")
+        return fw.engine
+
+    def epoch(self, name: str) -> int:
+        """Current staleness epoch of a table (cache-key component).
+        Unknown tables report -1 so stale cache entries for dropped tables
+        can never validate."""
+        fw = self._tables.get(name)
+        return fw.epoch if fw is not None else -1

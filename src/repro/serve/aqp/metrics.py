@@ -1,0 +1,91 @@
+"""Per-table serving telemetry: latency percentiles, throughput, hit rates.
+
+Latencies go into a bounded reservoir per table (uniform replacement after
+``reservoir`` samples) so long-running servers report stable p50/p99 without
+unbounded memory. Counters are exact.
+"""
+from __future__ import annotations
+
+import random
+import time
+
+import numpy as np
+
+
+class TableMetrics:
+    def __init__(self, reservoir: int = 4096, seed: int = 0):
+        self.reservoir = int(reservoir)
+        self._rng = random.Random(seed)
+        self._lat: list[float] = []
+        self.n_queries = 0          # executed (cache misses)
+        self.n_batched = 0          # executed via the fused batched kernel
+        self.n_fallback = 0         # executed via the per-query path
+        self.n_result_hits = 0      # served straight from the result cache
+        self._t_first = None
+        self._t_last = None
+
+    def record(self, latency_s: float, batched: bool):
+        now = time.perf_counter()
+        self._t_first = self._t_first if self._t_first is not None else now
+        self._t_last = now
+        self.n_queries += 1
+        if batched:
+            self.n_batched += 1
+        else:
+            self.n_fallback += 1
+        if len(self._lat) < self.reservoir:
+            self._lat.append(latency_s)
+        else:
+            idx = self._rng.randrange(self.n_queries)
+            if idx < self.reservoir:
+                self._lat[idx] = latency_s
+
+    def record_result_hit(self):
+        self.n_result_hits += 1
+
+    def snapshot(self) -> dict:
+        lat = np.asarray(self._lat, float)
+        served = self.n_queries + self.n_result_hits
+        span = ((self._t_last - self._t_first)
+                if self._t_first is not None else 0.0)
+        return {
+            "queries_served": served,
+            "queries_executed": self.n_queries,
+            "batched": self.n_batched,
+            "fallback": self.n_fallback,
+            "result_cache_hits": self.n_result_hits,
+            "batched_fraction": (self.n_batched / self.n_queries
+                                 if self.n_queries else 0.0),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else None,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else None,
+            "qps": (self.n_queries / span if span > 0 else None),
+        }
+
+
+class Metrics:
+    """Per-table TableMetrics plus server-wide aggregation."""
+
+    def __init__(self, reservoir: int = 4096):
+        self.reservoir = reservoir
+        self._tables: dict[str, TableMetrics] = {}
+
+    def table(self, name: str) -> TableMetrics:
+        tm = self._tables.get(name)
+        if tm is None:
+            tm = self._tables[name] = TableMetrics(self.reservoir)
+        return tm
+
+    def snapshot(self, plan_cache=None, result_cache=None) -> dict:
+        out = {name: tm.snapshot() for name, tm in sorted(self._tables.items())}
+        totals = {
+            "queries_served": sum(t["queries_served"] for t in out.values()),
+            "queries_executed": sum(t["queries_executed"] for t in out.values()),
+            "batched_fraction": (
+                sum(t["batched"] for t in out.values())
+                / max(sum(t["queries_executed"] for t in out.values()), 1)),
+        }
+        if plan_cache is not None:
+            totals["plan_cache"] = plan_cache.stats()
+        if result_cache is not None:
+            totals["result_cache"] = result_cache.stats()
+        return {"tables": out, "totals": totals}

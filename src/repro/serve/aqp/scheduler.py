@@ -1,0 +1,116 @@
+"""Batch scheduler: group in-flight queries by plan shape, fuse launches.
+
+At sub-ms per-query latency the serving bottleneck is dispatch, not math
+(the same observation that motivates ``core/fastpath``'s per-predicate
+fusion, one level up). The scheduler takes a set of in-flight planned
+queries and groups them by **plan shape** ``(table, exec column,
+pair-predicate column set)``; each group shares its padded (H, fold, hx)
+stacks and executes as ONE query-batched kernel launch covering every query
+and all three bound variants (``FastPath.batch`` ->
+``kernels.weightings.batched_weightings``). Per-query work shrinks to beta
+assembly + the final scalar aggregation.
+
+Queries outside the batchable shape (OR trees, GROUP BY, no WHERE) fall
+back to the per-table engine's own path — which is also the oracle the
+batched path is tested against.
+
+Execution modes:
+  * ``"pallas"`` — batched Pallas kernel (TPU; interpret elsewhere)
+  * ``"ref"``    — batched jitted-jnp oracle of the same kernel (f32)
+  * ``"numpy"``  — no fused launch; per-query reference execution,
+                   bit-identical to ``QueryEngine.query`` (grouping,
+                   dedup and caching still apply)
+  * ``None``     — auto: "pallas" on TPU, "numpy" elsewhere. On CPU the
+                   per-launch JAX dispatch the fused kernel amortizes on
+                   TPU *is* the overhead, so fusing small groups loses to
+                   NumPy (same reasoning as bench_kernels.py: Pallas off-TPU
+                   is for correctness, not speed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core.fastpath import FastPath
+from repro.core.query import QueryPlan, QueryResult
+
+
+@dataclasses.dataclass
+class ScheduledResult:
+    result: QueryResult
+    batched: bool           # executed via the fused batched launch
+    latency_s: float        # per-query wall share (group wall / group size)
+
+
+class BatchScheduler:
+    def __init__(self, catalog, mode: str | None = None,
+                 max_group: int = 256, min_group: int = 2):
+        if mode is None:
+            import jax
+            mode = "pallas" if jax.default_backend() == "tpu" else "numpy"
+        if mode not in ("pallas", "ref", "numpy"):
+            raise ValueError(f"unknown scheduler mode {mode!r}")
+        self.catalog = catalog
+        self.mode = mode
+        self.max_group = int(max_group)
+        # Groups below min_group skip the fused launch: a batch of one gains
+        # nothing from the kernel but still pays its dispatch.
+        self.min_group = int(min_group)
+        self.fastpath = (None if mode == "numpy"
+                         else FastPath(use_pallas=(mode == "pallas")))
+
+    # ----------------------------------------------------------------- public
+
+    def execute(self, items: list[tuple[str, QueryPlan]]
+                ) -> list[ScheduledResult]:
+        """Execute a wave of planned queries; returns results aligned with
+        ``items``. Grouping is transparent: results are identical (numpy
+        mode) / fp-close (kernel modes) to per-query execution."""
+        out: list[ScheduledResult | None] = [None] * len(items)
+        groups: dict[tuple, list[int]] = {}
+        for idx, (table, plan) in enumerate(items):
+            shape = plan.shape_key() if self.fastpath is not None else None
+            if shape is None:
+                self._run_single(items, idx, out)
+            else:
+                groups.setdefault((table,) + shape, []).append(idx)
+
+        for (table, exec_col, _cols), idxs in groups.items():
+            if len(idxs) < self.min_group:
+                for idx in idxs:
+                    self._run_single(items, idx, out)
+                continue
+            for lo in range(0, len(idxs), self.max_group):
+                self._run_group(items, table, exec_col,
+                                idxs[lo:lo + self.max_group], out)
+        return out  # type: ignore[return-value]
+
+    # ---------------------------------------------------------------- helpers
+
+    def _run_single(self, items, idx, out):
+        table, plan = items[idx]
+        engine = self.catalog.engine(table)
+        t0 = time.perf_counter()
+        res = engine.execute_plan(plan)
+        out[idx] = ScheduledResult(res, False, time.perf_counter() - t0)
+
+    def _run_group(self, items, table, exec_col, idxs, out):
+        engine = self.catalog.engine(table)
+        ph = engine.ph
+        t0 = time.perf_counter()
+        triples = None
+        if len(idxs) > 0 and self.fastpath is not None:
+            trees = [items[idx][1].tree for idx in idxs]
+            triples = self.fastpath.batch(ph, exec_col, trees,
+                                          engine.corrected)
+        if triples is None:       # ineligible after all: per-query fallback
+            for idx in idxs:
+                self._run_single(items, idx, out)
+            return
+        for triple, idx in zip(triples, idxs):
+            res = engine.execute_plan(items[idx][1], weightings=triple)
+            out[idx] = ScheduledResult(res, True, 0.0)
+        share = (time.perf_counter() - t0) / len(idxs)
+        for idx in idxs:
+            out[idx].latency_s = share
+            out[idx].result.latency_s = share

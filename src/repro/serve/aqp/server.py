@@ -1,0 +1,151 @@
+"""AQPServer: multi-table AQP serving front-end.
+
+Pipeline per wave of SQL strings (``query_batch``):
+
+    normalize -> plan cache -> result cache -> dedupe -> BatchScheduler
+       |            |              |                        |
+       |       (epoch-keyed   (epoch-keyed             one fused launch
+       |        QueryPlans)    QueryResults)           per plan shape
+       v
+    FROM <table> resolved via TableCatalog (PlanError if unknown)
+
+Staleness: every ``AQPFramework`` bumps its epoch on ingest/append_rows;
+cache entries are tagged with the epoch they were computed at, so appended
+rows can never be answered from a stale cache — a query against a stale
+(un-rebuilt) table raises ``RuntimeError`` exactly like the single-table
+``AQPFramework.query``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import sql as sqlmod
+from repro.core.query import QueryResult
+from repro.serve.aqp.cache import LRUCache, normalize_sql
+from repro.serve.aqp.catalog import TableCatalog
+from repro.serve.aqp.metrics import Metrics
+from repro.serve.aqp.scheduler import BatchScheduler
+
+
+class AQPServer:
+    def __init__(self, catalog: TableCatalog | None = None,
+                 mode: str | None = None,
+                 plan_cache_size: int = 4096,
+                 result_cache_size: int = 16384,
+                 max_group: int = 256, min_group: int = 2):
+        self.catalog = catalog or TableCatalog()
+        self.scheduler = BatchScheduler(self.catalog, mode=mode,
+                                        max_group=max_group,
+                                        min_group=min_group)
+        self.plan_cache = LRUCache(plan_cache_size)
+        self.result_cache = LRUCache(result_cache_size)
+        self.metrics = Metrics()
+        self._wiring: dict[str, tuple] = {}   # name -> (framework, callback)
+
+    # ------------------------------------------------------------ registration
+
+    def register(self, name: str, framework) -> "AQPServer":
+        """Register a table; wires eager cache purging to its invalidation.
+        Re-registering a name detaches the previous framework's wiring so a
+        replaced table can no longer purge its successor's cache entries."""
+        self.catalog.register(name, framework)
+        self._wire(name, framework)
+        return self
+
+    def register_table(self, name: str, table: dict, **kwargs) -> "AQPServer":
+        fw = self.catalog.register_table(name, table, **kwargs)
+        self._wire(name, fw)
+        return self
+
+    def _wire(self, name: str, framework):
+        old = self._wiring.pop(name, None)
+        if old is not None:
+            old[0].off_invalidate(old[1])
+            self._purge(name)     # drop entries computed from the old table
+        cb = lambda fw, name=name: self._purge(name)  # noqa: E731
+        framework.on_invalidate(cb)
+        self._wiring[name] = (framework, cb)
+
+    def unregister(self, name: str):
+        """Drop a table: detach its invalidation wiring and purge its
+        cache entries."""
+        old = self._wiring.pop(name, None)
+        if old is not None:
+            old[0].off_invalidate(old[1])
+        self.catalog.unregister(name)
+        self._purge(name)
+
+    def close(self):
+        """Detach every framework callback so a discarded server is not
+        kept alive (and purged into) by long-lived frameworks."""
+        for name, (fw, cb) in list(self._wiring.items()):
+            fw.off_invalidate(cb)
+        self._wiring.clear()
+
+    def _purge(self, name: str):
+        self.plan_cache.purge_table(name)
+        self.result_cache.purge_table(name)
+
+    # ----------------------------------------------------------------- queries
+
+    def query(self, sql_text: str) -> QueryResult:
+        return self.query_batch([sql_text])[0]
+
+    def query_batch(self, sqls: list[str]) -> list[QueryResult]:
+        """Answer a wave of queries; results align with ``sqls``.
+
+        Raises PlanError for unknown tables/columns and RuntimeError for
+        stale tables (the whole wave aborts — the serving contract matches
+        ``AQPFramework.query``).
+        """
+        results: list[QueryResult | None] = [None] * len(sqls)
+        pending: dict[str, list[int]] = {}       # norm -> indices to fill
+        pending_items: dict[str, tuple] = {}     # norm -> (table, plan)
+        epoch_of = self.catalog.epoch
+
+        for i, sql in enumerate(sqls):
+            norm = normalize_sql(sql)
+            if norm in pending:                  # duplicate within the wave
+                pending[norm].append(i)
+                continue
+            table, plan = self._plan_for(norm)
+            rentry = self.result_cache.get(norm, epoch_of)
+            if rentry is not None:
+                results[i] = dataclasses.replace(rentry.value, latency_s=0.0)
+                self.metrics.table(table).record_result_hit()
+                continue
+            self.result_cache.miss(table)
+            pending[norm] = [i]
+            pending_items[norm] = (table, plan)
+
+        if pending:
+            norms = list(pending)
+            scheduled = self.scheduler.execute(
+                [pending_items[n] for n in norms])
+            for norm, sr in zip(norms, scheduled):
+                table, _plan = pending_items[norm]
+                self.result_cache.put(norm, table, epoch_of(table), sr.result)
+                self.metrics.table(table).record(sr.latency_s, sr.batched)
+                idxs = pending[norm]
+                results[idxs[0]] = sr.result
+                for j in idxs[1:]:   # in-wave duplicates: served, not executed
+                    results[j] = dataclasses.replace(sr.result, latency_s=0.0)
+                    self.metrics.table(table).record_result_hit()
+        return results  # type: ignore[return-value]
+
+    def _plan_for(self, norm: str):
+        entry = self.plan_cache.get(norm, self.catalog.epoch)
+        if entry is not None:
+            return entry.table, entry.value
+        parsed = sqlmod.parse_sql(norm)
+        table = parsed.table
+        self.plan_cache.miss(table if table in self.catalog else None)
+        engine = self.catalog.engine(table)   # PlanError / RuntimeError here
+        plan = engine.plan_query(parsed)
+        self.plan_cache.put(norm, table, self.catalog.epoch(table), plan)
+        return table, plan
+
+    # ------------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        return self.metrics.snapshot(self.plan_cache, self.result_cache)

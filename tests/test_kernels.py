@@ -5,8 +5,9 @@ import pytest
 
 from repro.kernels.hist2d import hist2d
 from repro.kernels.hist2d.ref import hist2d_ref
-from repro.kernels.weightings import fused_weightings
-from repro.kernels.weightings.ref import fused_weightings_ref
+from repro.kernels.weightings import batched_weightings, fused_weightings
+from repro.kernels.weightings.ref import (batched_weightings_ref,
+                                          fused_weightings_ref)
 
 
 @pytest.mark.parametrize("n,ki,kj", [
@@ -54,6 +55,47 @@ def test_fused_weightings_matches_ref(el, k2, k1):
                                jnp.asarray(fold), jnp.asarray(hx))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("q,el,k2,k1", [
+    (1, 1, 16, 16), (5, 3, 70, 90), (17, 2, 200, 260), (64, 4, 128, 128),
+])
+def test_batched_weightings_matches_per_query(q, el, k2, k1):
+    """Query-batched kernel == per-query oracle, row by row, for both the
+    Pallas path and the jitted-jnp path."""
+    rng = np.random.default_rng(q * k2 + el)
+    H = (rng.random((el, k2, k2)) * 10).astype(np.float32)
+    hx = H.sum(2) + 1.0
+    fold = np.zeros((el, k1, k2), np.float32)
+    idx = np.sort(rng.integers(0, k2, k1))
+    for li in range(el):
+        fold[li, np.arange(k1), idx] = 1
+    beta = rng.random((q, el, k2)).astype(np.float32)
+    seq = np.stack([np.asarray(fused_weightings_ref(
+        jnp.asarray(H), jnp.asarray(beta[qi]), jnp.asarray(fold),
+        jnp.asarray(hx))) for qi in range(q)])
+    for use_pallas in (True, False):
+        out = np.asarray(batched_weightings(H, beta, fold, hx,
+                                            use_pallas=use_pallas))
+        assert out.shape == (q, k1)
+        np.testing.assert_allclose(out, seq, rtol=1e-5, atol=1e-6)
+
+
+def test_batched_weightings_ref_reduces_to_single():
+    """Q=1 batched ref == single-query ref exactly (same einsum graph)."""
+    rng = np.random.default_rng(11)
+    el, k2, k1 = 2, 32, 40
+    H = rng.random((el, k2, k2)).astype(np.float32)
+    hx = H.sum(2) + 1.0
+    fold = np.zeros((el, k1, k2), np.float32)
+    fold[:, np.arange(k1), np.sort(rng.integers(0, k2, k1))] = 1
+    beta = rng.random((1, el, k2)).astype(np.float32)
+    one = batched_weightings_ref(jnp.asarray(H), jnp.asarray(beta),
+                                 jnp.asarray(fold), jnp.asarray(hx))
+    single = fused_weightings_ref(jnp.asarray(H), jnp.asarray(beta[0]),
+                                  jnp.asarray(fold), jnp.asarray(hx))
+    np.testing.assert_allclose(np.asarray(one[0]), np.asarray(single),
+                               rtol=1e-6, atol=1e-7)
 
 
 def test_fused_weightings_identity_predicate():

@@ -1,0 +1,291 @@
+"""Multi-table AQP serving subsystem: catalog, batching oracle-equivalence,
+plan/result caches, staleness lifecycle, metrics."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.aqp.engine import AQPFramework
+from repro.core.query import PlanError
+from repro.core.types import BuildParams
+from repro.serve.aqp import AQPServer, TableCatalog, normalize_sql
+
+
+def _make_tables():
+    rng = np.random.default_rng(7)
+    n = 12_000
+    sensors = {
+        "a": rng.integers(0, 500, n).astype(float),
+        "b": np.abs(rng.normal(100, 30, n)).round(),
+        "c": rng.integers(0, 50, n).astype(float),
+    }
+    logs = {
+        "x": rng.integers(0, 300, n).astype(float),
+        "y": np.abs(rng.normal(10, 3, n)).round(),
+    }
+    return sensors, logs
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return _make_tables()
+
+
+@pytest.fixture(scope="module")
+def frameworks(tables):
+    params = BuildParams(n_samples=6_000, seed=1)
+    sensors, logs = tables
+    fws = {}
+    for name, tbl in (("sensors", sensors), ("logs", logs)):
+        fws[name] = AQPFramework(params=params,
+                                 use_compression=False).ingest(tbl)
+    return fws
+
+
+def _server(frameworks, mode):
+    srv = AQPServer(mode=mode)
+    for name, fw in frameworks.items():
+        srv.register(name, fw)
+    return srv
+
+
+def _mixed_workload():
+    """>= 32 queries across 2 tables: AND batches, same-col, OR fallbacks,
+    GROUP-BY-free aggregates of every kind."""
+    sqls = []
+    for thr in (60, 80, 100, 120, 140, 160):
+        sqls.append(f"SELECT COUNT(a) FROM sensors WHERE b > {thr} AND c < 25")
+        sqls.append(f"SELECT AVG(b) FROM sensors WHERE a < {thr * 3} AND c >= 5")
+        sqls.append(f"SELECT SUM(b) FROM sensors WHERE b <= {thr + 60}")
+        sqls.append(f"SELECT SUM(y) FROM logs WHERE x > {thr}")
+        sqls.append(f"SELECT COUNT(*) FROM logs WHERE x < {thr} OR y > 12")
+    sqls += [
+        "SELECT MIN(b) FROM sensors WHERE b > 90 AND a < 400",
+        "SELECT MAX(b) FROM sensors WHERE b < 180 AND c > 2",
+        "SELECT MEDIAN(y) FROM logs WHERE x >= 50 AND x < 250",
+        "SELECT VAR(y) FROM logs WHERE x > 20",
+        "SELECT COUNT(*) FROM sensors WHERE (a < 100 OR c > 40) AND b > 70",
+        "SELECT AVG(y) FROM logs",
+    ]
+    return sqls
+
+
+# ------------------------------------------------------------------- catalog
+
+
+def test_unknown_table_raises_plan_error(frameworks):
+    srv = _server(frameworks, mode="numpy")
+    with pytest.raises(PlanError) as exc:
+        srv.query("SELECT COUNT(*) FROM nope WHERE a > 1")
+    msg = str(exc.value)
+    assert "unknown table 'nope'" in msg
+    assert "logs" in msg and "sensors" in msg
+
+
+def test_catalog_resolve_and_epoch(frameworks):
+    cat = TableCatalog()
+    cat.register("sensors", frameworks["sensors"])
+    assert "sensors" in cat and "nope" not in cat
+    assert cat.epoch("sensors") == frameworks["sensors"].epoch
+    assert cat.epoch("nope") == -1
+    with pytest.raises(PlanError):
+        cat.resolve("nope")
+
+
+# ------------------------------------------------- batched oracle equivalence
+
+
+def test_batched_numpy_mode_bit_for_bit(frameworks):
+    """numpy scheduler mode routes through the exact sequential code path."""
+    srv = _server(frameworks, mode="numpy")
+    sqls = _mixed_workload()
+    assert len(sqls) >= 32
+    got = srv.query_batch(sqls)
+    for sql, res in zip(sqls, got):
+        table = "sensors" if "sensors" in sql else "logs"
+        ref = frameworks[table].engine.query(sql)
+        assert res.as_tuple() == ref.as_tuple(), sql
+
+
+def test_batched_kernel_mode_matches_sequential(frameworks):
+    """Fused batched launches (jnp oracle of the Pallas kernel, f32) match
+    the sequential f64 reference to fp tolerance; OR trees fall back and
+    match exactly."""
+    srv = _server(frameworks, mode="ref")
+    sqls = _mixed_workload()
+    got = srv.query_batch(sqls)
+    n_batched = sum(t["batched"] for t in srv.stats()["tables"].values())
+    assert n_batched >= 20          # the AND templates actually fused
+    for sql, res in zip(sqls, got):
+        table = "sensors" if "sensors" in sql else "logs"
+        ref = frameworks[table].engine.query(sql)
+        np.testing.assert_allclose(res.as_tuple(), ref.as_tuple(),
+                                   rtol=1e-4, atol=1e-6, err_msg=sql)
+        if " OR " in sql:           # fallback path: identical code
+            assert res.as_tuple() == ref.as_tuple(), sql
+
+
+def test_batched_pallas_interpret_matches_sequential(frameworks):
+    srv = AQPServer(mode="pallas", min_group=1)
+    for name, fw in frameworks.items():
+        srv.register(name, fw)
+    sqls = ["SELECT COUNT(a) FROM sensors WHERE b > 100 AND c < 30",
+            "SELECT COUNT(a) FROM sensors WHERE b > 80 AND c < 40",
+            "SELECT AVG(b) FROM sensors WHERE a < 300 AND c < 40",
+            "SELECT SUM(y) FROM logs WHERE x > 120 AND y < 16",
+            "SELECT COUNT(x) FROM logs WHERE x <= 240 AND y >= 6"]
+    got = srv.query_batch(sqls)
+    for sql, res in zip(sqls, got):
+        table = "sensors" if "sensors" in sql else "logs"
+        ref = frameworks[table].engine.query(sql)
+        np.testing.assert_allclose(res.as_tuple(), ref.as_tuple(),
+                                   rtol=1e-4, atol=1e-6, err_msg=sql)
+
+
+# ------------------------------------------------------------------- caching
+
+
+def test_plan_and_result_cache_hits(frameworks):
+    srv = _server(frameworks, mode="ref")
+    sql = "SELECT COUNT(a) FROM sensors WHERE b > 110 AND c < 20"
+    first = srv.query(sql)
+    again = srv.query("  SELECT  COUNT(a)  FROM sensors "
+                      "WHERE b > 110 AND c < 20 ; ")   # same after normalize
+    assert again.as_tuple() == first.as_tuple()
+    st = srv.stats()["totals"]
+    assert st["result_cache"]["hits"] == 1
+    assert st["queries_executed"] == 1      # second answer came from cache
+    # duplicate within one wave executes once
+    res = srv.query_batch(["SELECT SUM(y) FROM logs WHERE x > 99"] * 5)
+    assert len({r.as_tuple() for r in res}) == 1
+    assert srv.stats()["totals"]["queries_executed"] == 2
+
+
+def test_normalize_sql():
+    assert normalize_sql("  SELECT COUNT(*)\n FROM t ; ") \
+        == "SELECT COUNT(*) FROM t"
+    # quoted literals survive verbatim: the server parses the normalized
+    # text, so 'New  York' must keep its double space (and distinct
+    # literals must not collide onto one cache key)
+    a = normalize_sql("SELECT COUNT(*) FROM t WHERE city = 'New  York'")
+    b = normalize_sql("SELECT COUNT(*) FROM t WHERE city = 'New York'")
+    assert "'New  York'" in a and a != b
+
+
+def test_reregister_detaches_old_framework(tables):
+    """A replaced framework can no longer purge its successor's caches."""
+    sensors, _ = tables
+    params = BuildParams(n_samples=2_000, seed=4)
+    fw1 = AQPFramework(params=params, use_compression=False).ingest(sensors)
+    fw2 = AQPFramework(params=params, use_compression=False).ingest(sensors)
+    srv = AQPServer(mode="numpy").register("t", fw1)
+    srv.register("t", fw2)               # replace: fw1 wiring detached
+    sql = "SELECT COUNT(*) FROM t WHERE a >= 0"
+    srv.query(sql)
+    assert len(srv.result_cache) == 1
+    fw1.append_rows({k: np.asarray(v)[:10] for k, v in sensors.items()})
+    assert len(srv.result_cache) == 1    # fw1's bump didn't purge fw2 entries
+    fw2.append_rows({k: np.asarray(v)[:10] for k, v in sensors.items()})
+    assert len(srv.result_cache) == 0    # fw2's bump did
+
+
+# ------------------------------------------------------- staleness lifecycle
+
+
+def test_staleness_lifecycle_and_cache_invalidation(tables):
+    sensors, _ = tables
+    params = BuildParams(n_samples=4_000, seed=2)
+    fw = AQPFramework(params=params, use_compression=False).ingest(sensors)
+    srv = AQPServer(mode="ref").register("sensors", fw)
+
+    sql = "SELECT COUNT(*) FROM sensors WHERE a >= 0"
+    before = srv.query(sql)
+    assert srv.query(sql).as_tuple() == before.as_tuple()  # cached
+
+    extra = {k: np.asarray(v)[:2_000] for k, v in sensors.items()}
+    fw.append_rows(extra)
+    assert fw.is_stale
+    with pytest.raises(RuntimeError, match="stale"):
+        srv.query(sql)                  # cache is NOT consulted when stale
+    with pytest.raises(RuntimeError, match="stale"):
+        fw.query(sql)                   # single-table contract unchanged
+
+    fw.rebuild(sensors)
+    after = srv.query(sql)
+    assert after.estimate is not None
+    # the rebuilt table has 2k more rows: a stale cached COUNT would be wrong
+    assert after.estimate > before.estimate
+    np.testing.assert_allclose(after.estimate, fw.synopsis.n_rows, rtol=1e-6)
+    # batched path after rebuild uses the NEW synopsis's kernel stacks
+    # (stack cache lives on the PairwiseHist, dies with it)
+    batched_sql = "SELECT COUNT(a) FROM sensors WHERE b > 100 AND c < 25"
+    got = srv.query_batch([batched_sql,
+                           "SELECT COUNT(a) FROM sensors "
+                           "WHERE b > 120 AND c < 25"])
+    ref = fw.engine.query(batched_sql)
+    np.testing.assert_allclose(got[0].as_tuple(), ref.as_tuple(),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_epoch_bumps(tables):
+    sensors, _ = tables
+    params = BuildParams(n_samples=2_000, seed=3)
+    fw = AQPFramework(params=params, use_compression=False)
+    seen = []
+    fw.on_invalidate(lambda f: seen.append(f.epoch))
+    fw.ingest(sensors)
+    fw.append_rows({k: np.asarray(v)[:100] for k, v in sensors.items()})
+    fw.rebuild(sensors)
+    # epochs are strictly increasing and drawn from a process-global
+    # sequence: no two frameworks can ever share an epoch value
+    assert len(seen) == 3 and seen == sorted(set(seen))
+    fw2 = AQPFramework(params=params, use_compression=False)
+    fw2.ingest({k: np.asarray(v)[:500] for k, v in sensors.items()})
+    assert fw2.epoch > fw.epoch
+
+
+def test_replacing_table_via_catalog_cannot_serve_stale(tables):
+    """Even bypassing AQPServer.register (raw catalog swap), globally
+    unique epochs make the old table's cached results unservable."""
+    sensors, _ = tables
+    params = BuildParams(n_samples=2_000, seed=5)
+    small = {k: np.asarray(v)[:4_000] for k, v in sensors.items()}
+    big = {k: np.asarray(v)[:9_000] for k, v in sensors.items()}
+    fw1 = AQPFramework(params=params, use_compression=False).ingest(small)
+    fw2 = AQPFramework(params=params, use_compression=False).ingest(big)
+    srv = AQPServer(mode="numpy").register("t", fw1)
+    sql = "SELECT COUNT(*) FROM t WHERE a >= 0"
+    assert round(srv.query(sql).estimate) == 4_000
+    srv.catalog.register("t", fw2)       # raw swap, no server wiring
+    assert round(srv.query(sql).estimate) == 9_000
+
+
+def test_unregister_and_close_detach(tables):
+    sensors, _ = tables
+    params = BuildParams(n_samples=2_000, seed=6)
+    fw = AQPFramework(params=params, use_compression=False).ingest(sensors)
+    srv = AQPServer(mode="numpy").register("t", fw)
+    srv.query("SELECT COUNT(*) FROM t WHERE a >= 0")
+    srv.unregister("t")
+    assert len(srv.result_cache) == 0 and not fw._invalidate_cbs
+    with pytest.raises(PlanError):
+        srv.query("SELECT COUNT(*) FROM t WHERE a >= 0")
+    srv2 = AQPServer(mode="numpy").register("t", fw)
+    srv2.close()
+    assert not fw._invalidate_cbs       # discarded server is unreferenced
+
+
+# ------------------------------------------------------------------- metrics
+
+
+def test_metrics_snapshot(frameworks):
+    srv = _server(frameworks, mode="ref")
+    srv.query_batch(_mixed_workload())
+    snap = srv.stats()
+    for name in ("sensors", "logs"):
+        tm = snap["tables"][name]
+        assert tm["queries_executed"] > 0
+        assert tm["p50_ms"] is not None and tm["p99_ms"] is not None
+        assert tm["p50_ms"] <= tm["p99_ms"] + 1e-9
+    assert 0.0 < snap["totals"]["batched_fraction"] <= 1.0
+    assert "hit_rate" in snap["totals"]["plan_cache"]
