@@ -1,9 +1,22 @@
-"""§Perf (AQP side): paper-faithful sequential construction (Algorithm 1/2,
-recursive NumPy) vs the level-synchronous vectorized JAX construction —
-measured wall-clock on CPU, identical 1-D outputs asserted.
+"""§Perf (AQP side): construction benchmarks.
+
+Two comparisons:
+
+  1. paper-faithful sequential (Algorithm 1/2, recursive NumPy) vs the
+     level-synchronous vectorized JAX construction (full build);
+  2. the 2-D *pair phase* in isolation: legacy per-pair host loop (one
+     compiled launch + blocking device->host sync per pair,
+     ``build.build_pairs_sequential``) vs the pair-batched path
+     (``build.build_pairs_batched``: chunked (P, N) tensors, one while_loop
+     per chunk, one grouped transfer, adaptive capacity ladder) — measured
+     at d >= 8 with a pairs-per-second metric, bit-for-bit equality
+     asserted in oracle mode. Both paths are timed via the synopsis's
+     ``build_stats`` telemetry on repeated warm builds; the reported
+     number is the median of ``repeats`` runs (2-core CI boxes are noisy).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -15,8 +28,40 @@ from repro.core.build import build_pairwise_hist
 from repro.core.types import BuildParams, ColumnInfo
 
 
+def _pair_phase_data(n: int, d: int, rng):
+    """d >= 8 mixed workload: independent + correlated + heavy-tail columns
+    so the 2-D refinement actually splits (the all-independent case is the
+    degenerate no-split fast path)."""
+    base = np.abs(rng.normal(300, 90, n))
+    cols = [np.round(np.abs(rng.normal(100 * (i + 1), 20 + 10 * i, n)))
+            for i in range(d - 2)]
+    cols.append(np.round(base))
+    cols.append(np.round(base * 2 + rng.normal(0, 20, n)))
+    return np.stack(cols, 1)
+
+
+def _timed_pair_phase(data, cols, params, repeats: int):
+    syn = build_pairwise_hist(data, cols, params)    # warm jit caches
+    times = []
+    for _ in range(repeats):
+        syn = build_pairwise_hist(data, cols, params)
+        times.append(syn.build_stats["pair_phase_s"])
+    return float(np.median(times)), syn.build_stats
+
+
+def _assert_pairs_equal(a, b):
+    assert set(a.pairs) == set(b.pairs)
+    for key in a.pairs:
+        for f, x, y in zip(a.pairs[key]._fields, a.pairs[key], b.pairs[key]):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"pair {key} field {f}")
+
+
 def run(rows: list, quick: bool = False):
     rng = np.random.default_rng(3)
+    out = {}
+
+    # --- 1. paper-faithful sequential recursion vs level-sync JAX ----------
     n = 50_000 if quick else 100_000
     d = 4 if quick else 6
     cols_data = [np.round(np.abs(rng.normal(100 * (i + 1), 20 + 10 * i, n)))
@@ -25,12 +70,7 @@ def run(rows: list, quick: bool = False):
     crit = chi2lib.build_crit_table(0.001, 128)
     m_pts = n // 100
 
-    # paper-faithful sequential (1-D + 2-D)
     t0 = time.perf_counter()
-    for i in range(d):
-        x = data[:, i]
-        init = np.array([x.min(), x.max()])
-        e_i, _, _, _, _ = ref_sequential.build_1d_sequential(x, init, m_pts, crit)
     edges_1d = {}
     for i in range(d):
         x = data[:, i]
@@ -44,7 +84,6 @@ def run(rows: list, quick: bool = False):
                 s_max=32)
     t_seq = time.perf_counter() - t0
 
-    # level-synchronous vectorized
     cols = [ColumnInfo(name=f"c{i}", kind="int") for i in range(d)]
     params = BuildParams(n_samples=n)
     build_pairwise_hist(data, cols, params)  # warm the jit caches
@@ -52,11 +91,45 @@ def run(rows: list, quick: bool = False):
     build_pairwise_hist(data, cols, params)
     t_vec = time.perf_counter() - t0
 
-    out = {"n": n, "d": d, "sequential_s": t_seq, "vectorized_s": t_vec,
-           "speedup": t_seq / t_vec}
+    out["full_build"] = {"n": n, "d": d, "sequential_s": t_seq,
+                         "vectorized_s": t_vec, "speedup": t_seq / t_vec}
     emit(rows, "construction/sequential_alg1", t_seq * 1e6, "paper-faithful")
     emit(rows, "construction/levelsync_jax", t_vec * 1e6,
          f"{t_seq / t_vec:.2f}x vs sequential")
+
+    # --- 2. pair phase: legacy per-pair loop vs pair-batched ---------------
+    n2 = 20_000 if quick else 60_000
+    d2 = 8
+    repeats = 2 if quick else 3
+    data2 = _pair_phase_data(n2, d2, rng)
+    cols2 = [ColumnInfo(name=f"c{i}", kind="int") for i in range(d2)]
+    n_pairs = d2 * (d2 - 1) // 2
+    p_loop = BuildParams(n_samples=n2, pair_batched=False)
+    p_batched = dataclasses.replace(p_loop, pair_batched=True)
+
+    t_loop, _ = _timed_pair_phase(data2, cols2, p_loop, repeats)
+    t_batched, bstats = _timed_pair_phase(data2, cols2, p_batched, repeats)
+    launches = bstats["pair_launches"]
+
+    # bit-for-bit equality of the two paths in oracle mode (the acceptance
+    # bar for the batched rewrite) — checked on the benchmark workload.
+    _assert_pairs_equal(build_pairwise_hist(data2, cols2, p_loop),
+                        build_pairwise_hist(data2, cols2, p_batched))
+
+    speedup = t_loop / t_batched
+    out["pair_phase"] = {
+        "n": n2, "d": d2, "n_pairs": n_pairs,
+        "per_pair_loop_s": t_loop, "batched_s": t_batched,
+        "speedup": speedup,
+        "pairs_per_s_loop": n_pairs / t_loop,
+        "pairs_per_s_batched": n_pairs / t_batched,
+        "batched_launches": [list(l) for l in launches],
+        "bitforbit_equal": True,
+    }
+    emit(rows, "construction/pair_loop", t_loop * 1e6,
+         f"{n_pairs / t_loop:.1f} pairs/s")
+    emit(rows, "construction/pair_batched", t_batched * 1e6,
+         f"{n_pairs / t_batched:.1f} pairs/s; {speedup:.2f}x vs loop")
     save_json("construction", out)
     return out
 

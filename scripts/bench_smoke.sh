@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# CI perf smoke: quick construction benchmark + JSON snapshot.
+#
+# Runs the construction suite (full-build comparison + the 2-D pair phase
+# legacy-loop-vs-batched comparison with pairs/sec) in --quick mode and
+# snapshots the JSON artifact to BENCH_construction.json at the repo root
+# so the perf trajectory is tracked in-tree.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
+    --only construction --quick "$@"
+cp benchmarks/results/construction.json BENCH_construction.json
+echo "wrote BENCH_construction.json"

@@ -95,6 +95,12 @@ class AQPFramework:
         self.engine = QueryEngine(self.synopsis, fastpath=self.fastpath)
         self.timings = {"preprocess_s": t1 - t0, "compress_s": t2 - t1,
                         "build_synopsis_s": t3 - t2}
+        # Pair-phase telemetry from the (batched) builder: rebuild() runs
+        # through here too, so serving-cache invalidation pauses
+        # (append_rows -> rebuild) are dominated by this number.
+        stats = self.synopsis.build_stats
+        self.timings["build_pairs_s"] = stats.get("pair_phase_s", 0.0)
+        self.timings["build_pair_mode"] = stats.get("mode", "")
         self._bump_epoch()
         return self
 

@@ -2,18 +2,35 @@
 
 Pipeline:
   1. downsample the (pre-processed, integer-domain) dataset to N_s rows;
-  2. per column: sort once, prefix-unique once, then `refine_1d` (vmapped
-     across all columns — one kernel refines every column's histogram);
-  3. per column pair: `refine_2d` + `pair_metadata` (host loop re-using one
-     compiled function; all pairs share shapes).
+  2. all columns at once: one ``np.sort(axis=0)`` + vectorized unique-prefix,
+     then ``refine_1d`` (vmapped across all columns — one kernel refines
+     every column's histogram);
+  3. pair-batched 2-D refinement: the d(d-1)/2 pairs stack into (P, N_s)
+     tensors in chunks of ``BuildParams.pair_chunk`` (bucketed to powers of
+     two so jit compiles a bounded set of shapes), ONE ``lax.while_loop``
+     refines every pair of a chunk level-synchronously
+     (``refine.build_pairs_device``), and each chunk's results arrive in a
+     single grouped device->host transfer — no per-pair ``int(kx)`` /
+     ``np.asarray`` round-trips. The per-round bin-index + cell-count inner
+     loop dispatches through ``repro.kernels.hist2d.batched_hist2d``
+     (Pallas one-hot matmuls when ``params.use_pallas``; dtype-preserving
+     jnp oracle otherwise). The legacy per-pair host loop survives as
+     ``build_pairs_sequential`` (oracle + benchmark baseline; bit-for-bit
+     equal results, asserted in tests/test_build_batched.py).
 
 Missing values (NaN) are excluded per-histogram: a row missing column i does
 not contribute to hist(i) nor to any pair involving i — matching SQL
 semantics (aggregates ignore NULL, comparisons with NULL are false).
+
+``build_pairwise_hist`` never mutates its inputs: per-column null counts are
+attached to *copies* of the caller's ``ColumnInfo`` objects (the synopsis
+owns its own column list).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
+import time
 
 import jax
 import jax.numpy as jnp
@@ -23,24 +40,30 @@ from repro.core import chi2 as chi2lib
 from repro.core import refine
 from repro.core.types import BuildParams, ColumnInfo, Hist1D, PairHist, PairwiseHist
 
+def _prep_columns(sample: np.ndarray):
+    """Sort all columns at once with NaN (missing) pushed to +inf at the tail.
 
-def _prep_column(col_vals: np.ndarray):
-    """Sort one column with NaN (missing) pushed to +inf at the tail.
-
-    Returns (sorted values, unique-prefix array, n_valid, vmin, vmax).
+    One ``np.sort(axis=0)`` over the (N, d) sample plus a vectorized
+    unique-prefix replaces the former Python loop of d per-column sorts.
+    Returns (xs_all (d, N), uprefix_all (d, N+1), n_valid (d,), vmin (d,),
+    vmax (d,)).
     """
-    x = np.asarray(col_vals, np.float64).copy()
+    x = np.asarray(sample, np.float64).copy()
+    n, d = x.shape
     nan = np.isnan(x)
     x[nan] = np.inf
-    xs = np.sort(x)
-    n_valid = int(x.size - nan.sum())
-    new = np.empty(x.size, bool)
+    xs = np.sort(x, axis=0)                       # (N, d)
+    n_valid = (n - nan.sum(axis=0)).astype(np.int64)
+    new = np.empty((n, d), bool)
     new[0] = True
     new[1:] = xs[1:] != xs[:-1]
-    uprefix = np.concatenate([[0], np.cumsum(new)]).astype(np.int64)
-    if n_valid == 0:
-        return xs, uprefix, 0, 0.0, 0.0
-    return xs, uprefix, n_valid, float(xs[0]), float(xs[n_valid - 1])
+    up = np.zeros((n + 1, d), np.int64)
+    np.cumsum(new, axis=0, out=up[1:])
+    has = n_valid > 0
+    vmin = np.where(has, xs[0], 0.0)
+    vmax = np.where(has, xs[np.maximum(n_valid - 1, 0), np.arange(d)], 0.0)
+    return (np.ascontiguousarray(xs.T), np.ascontiguousarray(up.T),
+            n_valid, vmin, vmax)
 
 
 def fold_to_rows(edges_1d: np.ndarray, edges_pair: np.ndarray) -> np.ndarray:
@@ -76,6 +99,171 @@ def _init_edges(vmin: float, vmax: float, cap: int, n_take: int,
     return out, n_bins
 
 
+def _pad_edges(e: np.ndarray, cap: int) -> np.ndarray:
+    out = np.full(cap + 1, np.inf, np.float64)
+    out[: min(e.size, cap + 1)] = e[: cap + 1]
+    return out
+
+
+def _pair_keys(d: int) -> list[tuple[int, int]]:
+    """Pair keys (a, b), a < b, in the legacy loop's emission order."""
+    return [(j, i) for i in range(1, d) for j in range(i)]
+
+
+def _trim_pair(ex, ey, kx, ky, H, hx, ux, vminx, vmaxx, hy, uy, vminy,
+               vmaxy) -> PairHist:
+    """Trim one pair's fixed-capacity (host) arrays to its valid bins."""
+    nkx, nky = int(kx), int(ky)
+    return PairHist(
+        ex=ex[: nkx + 1].copy(), ey=ey[: nky + 1].copy(),
+        kx=np.int32(nkx), ky=np.int32(nky),
+        H=H[:nkx, :nky].copy(),
+        hx=hx[:nkx].copy(), ux=ux[:nkx].copy(),
+        vminx=vminx[:nkx].copy(), vmaxx=vmaxx[:nkx].copy(),
+        hy=hy[:nky].copy(), uy=uy[:nky].copy(),
+        vminy=vminy[:nky].copy(), vmaxy=vmaxy[:nky].copy(),
+        fold_x=np.zeros(0, np.int32), fold_y=np.zeros(0, np.int32),
+    )
+
+
+def build_pairs_sequential(sample: np.ndarray, hists: list, params,
+                           crit2, m_pts: int) -> dict:
+    """Legacy per-pair host loop (one compiled function, P sequential
+    launches with a blocking device->host sync per pair).
+
+    Kept as the bit-for-bit oracle for the batched path and as the
+    benchmark baseline. Returns {(a, b): PairHist} without fold maps.
+    """
+    K2 = params.k2_cap
+    sample_j = jnp.asarray(np.nan_to_num(sample, nan=0.0))
+    nanmask = np.isnan(sample)
+    raw_pairs = {}
+    for a, b in _pair_keys(sample.shape[1]):
+        valid = jnp.asarray(~(nanmask[:, a] | nanmask[:, b]))
+        ex0 = jnp.asarray(_pad_edges(hists[a].edges, K2))
+        ey0 = jnp.asarray(_pad_edges(hists[b].edges, K2))
+        kx0 = jnp.int32(min(int(hists[a].k), K2))
+        ky0 = jnp.int32(min(int(hists[b].k), K2))
+        x = sample_j[:, a]
+        y = sample_j[:, b]
+        ex, ey, kx, ky = refine.refine_2d(
+            x, y, valid, ex0, ey0, kx0, ky0, jnp.float64(m_pts), crit2,
+            k2=K2, s_max=params.s2_max, max_rounds=params.max_rounds_2d)
+        out = refine.pair_metadata(x, y, valid, ex, ey, kx, ky, k2=K2)
+        raw_pairs[(a, b)] = _trim_pair(
+            *(np.asarray(v) for v in (ex, ey, kx, ky) + tuple(out)))
+    return raw_pairs
+
+
+def _presort_pairs_host(x, y, valid):
+    """Host-side ``refine.presort_pairs`` (numpy's sort beats XLA:CPU's).
+
+    Same layout and same (stable lexsort) semantics; done once per chunk —
+    the per-round unique counts then need no sort at all.
+    """
+    n_pairs, n = x.shape
+    xo1 = np.empty_like(x)
+    yo1 = np.empty_like(y)
+    vo1 = np.empty_like(valid)
+    xo2 = np.empty_like(x)
+    yo2 = np.empty_like(y)
+    vo2 = np.empty_like(valid)
+    for p in range(n_pairs):
+        kx = np.where(valid[p], x[p], np.inf)
+        ky = np.where(valid[p], y[p], np.inf)
+        o1 = np.lexsort((ky, kx))
+        o2 = np.lexsort((kx, ky))
+        xo1[p], yo1[p], vo1[p] = x[p][o1], y[p][o1], valid[p][o1]
+        xo2[p], yo2[p], vo2[p] = x[p][o2], y[p][o2], valid[p][o2]
+    new1 = np.empty((n_pairs, n), bool)
+    new1[:, 0] = True
+    new1[:, 1:] = xo1[:, 1:] != xo1[:, :-1]
+    new2 = np.empty((n_pairs, n), bool)
+    new2[:, 0] = True
+    new2[:, 1:] = yo2[:, 1:] != yo2[:, :-1]
+    return xo1, yo1, vo1, new1, xo2, yo2, vo2, new2
+
+
+def _cap_ladder(need: int, k2_cap: int, k2_start: int) -> list[int]:
+    """Doubling capacity ladder: smallest rung fitting ``need`` up to k2_cap."""
+    c = max(2, k2_start)
+    while c < need:
+        c *= 2
+    c = min(c, k2_cap)
+    ladder = [c]
+    while c < k2_cap:
+        c = min(c * 2, k2_cap)
+        ladder.append(c)
+    return ladder
+
+
+def build_pairs_batched(sample: np.ndarray, hists: list, params,
+                        crit2, m_pts: int, stats: dict | None = None) -> dict:
+    """Pair-batched 2-D construction: chunked (P, N) launches, one grouped
+    device->host transfer per chunk. Returns {(a, b): PairHist} (no folds);
+    records per-chunk (size, capacity) launches into ``stats``.
+
+    Each chunk refines at the smallest capacity rung that fits its initial
+    grids; if any pair's capacity guard binds, the whole chunk re-runs one
+    rung up (results are capacity-independent while the guard is slack, so
+    this is exact — and saturation is the rare case by design).
+    """
+    K2 = params.k2_cap
+    n_s, d = sample.shape
+    keys = _pair_keys(d)
+    sample_nn = np.nan_to_num(sample, nan=0.0)
+    nanmask = np.isnan(sample)
+    # Normalize the chunk cap to a power of two — rounding DOWN, so the
+    # documented memory bound (~ pair_chunk * k2^2 * s2_max) is honoured;
+    # the tail chunk buckets to the next power of two >= its size, so jit
+    # sees at most log2(chunk) + 1 distinct batch shapes per capacity rung.
+    chunk = 1 << (max(1, int(params.pair_chunk)).bit_length() - 1)
+    launches = []
+    raw_pairs = {}
+    for start in range(0, len(keys), chunk):
+        part = keys[start:start + chunk]
+        size = 1 << max(0, len(part) - 1).bit_length()
+        x = np.zeros((size, n_s), np.float64)
+        y = np.zeros((size, n_s), np.float64)
+        valid = np.zeros((size, n_s), bool)
+        kx0 = np.ones(size, np.int32)
+        ky0 = np.ones(size, np.int32)
+        for p, (a, b) in enumerate(part):
+            x[p] = sample_nn[:, a]
+            y[p] = sample_nn[:, b]
+            valid[p] = ~(nanmask[:, a] | nanmask[:, b])
+            kx0[p] = min(int(hists[a].k), K2)
+            ky0[p] = min(int(hists[b].k), K2)
+        pres_j = tuple(jnp.asarray(a) for a in
+                       _presort_pairs_host(x, y, valid))
+        need = int(max(kx0.max(), ky0.max()))
+        for cap in _cap_ladder(need, K2, params.k2_start):
+            ex0 = np.full((size, cap + 1), np.inf, np.float64)
+            ey0 = np.full((size, cap + 1), np.inf, np.float64)
+            ex0[:, :2] = 0.0
+            ey0[:, :2] = 0.0  # dummy lanes: one empty bin, no valid rows
+            for p, (a, b) in enumerate(part):
+                ex0[p] = _pad_edges(hists[a].edges, cap)
+                ey0[p] = _pad_edges(hists[b].edges, cap)
+            out = refine.build_pairs_device(
+                *pres_j, jnp.asarray(ex0), jnp.asarray(ey0),
+                jnp.asarray(kx0), jnp.asarray(ky0),
+                jnp.float64(m_pts), crit2, k2=cap, s_max=params.s2_max,
+                max_rounds=params.max_rounds_2d,
+                use_pallas=params.use_pallas)
+            host = jax.device_get(out)  # ONE grouped transfer for the chunk
+            launches.append((size, cap))
+            capped = host[4]
+            if cap >= K2 or not capped[: len(part)].any():
+                break
+        fields = host[:4] + host[5:]    # drop the capped flag
+        for p, (a, b) in enumerate(part):
+            raw_pairs[(a, b)] = _trim_pair(*(v[p] for v in fields))
+    if stats is not None:
+        stats["pair_launches"] = launches
+    return raw_pairs
+
+
 def build_pairwise_hist(
     data: np.ndarray,
     columns: list[ColumnInfo],
@@ -90,6 +278,9 @@ def build_pairwise_hist(
     edge candidates — typically reconstructed GreedyGD bases (§3).
     ``n_rows_full`` is N of the complete dataset when ``data`` is itself
     already a sample of something larger (IDEBench-style scale-up).
+
+    The input ``columns`` list is left untouched; the returned synopsis
+    carries copies with per-column null counts filled in.
     """
     params = params or BuildParams()
     data = np.asarray(data, np.float64)
@@ -116,14 +307,13 @@ def build_pairwise_hist(
 
     # --- 2. one-dimensional histograms (vmapped across columns) ------------
     K1 = params.k1_cap
-    xs_all = np.empty((d, n_s), np.float64)
-    up_all = np.empty((d, n_s + 1), np.int64)
+    xs_all, up_all, nv_all, vmin_all, vmax_all = _prep_columns(sample)
+    columns = [dataclasses.replace(c, n_null=int(n_s - nv_all[i]))
+               for i, c in enumerate(columns)]
     e0_all = np.empty((d, K1 + 1), np.float64)
     n0_all = np.empty((d,), np.int32)
     mu_all = np.array([c.mu for c in columns], np.float64)
     for i in range(d):
-        xs, up, n_valid, vmin, vmax = _prep_column(sample[:, i])
-        xs_all[i], up_all[i] = xs, up
         seed = None if seed_edges is None else seed_edges[i]
         if columns[i].kind == "categorical" and \
                 0 < len(columns[i].categories) <= max(n_take, 4):
@@ -133,8 +323,8 @@ def build_pairwise_hist(
             # (GD-bases seeding achieves the same: each category is a base.)
             # Half-integer edges isolate every code incl. the last two.
             seed = np.arange(len(columns[i].categories) - 1) + 0.5
-        e0_all[i], n0_all[i] = _init_edges(vmin, vmax, K1, n_take, seed)
-        columns[i].n_null = n_s - n_valid
+        e0_all[i], n0_all[i] = _init_edges(vmin_all[i], vmax_all[i], K1,
+                                           n_take, seed)
 
     refine_v = jax.vmap(
         lambda xs, up, e0, n0: refine.refine_1d(
@@ -168,48 +358,21 @@ def build_pairwise_hist(
             cplus=np.asarray(cp_j)[i, :k].copy(),
         ))
 
-    # --- 3. pair histograms -------------------------------------------------
-    K2 = params.k2_cap
-    pairs: dict[tuple[int, int], PairHist] = {}
-    sample_j = jnp.asarray(np.nan_to_num(sample, nan=0.0))
-    nanmask = np.isnan(sample)
-
-    def pad_edges(e: np.ndarray) -> np.ndarray:
-        out = np.full(K2 + 1, np.inf, np.float64)
-        out[: min(e.size, K2 + 1)] = e[: K2 + 1]
-        return out
-
-    raw_pairs = {}
-    for i in range(d):
-        for j in range(i):
-            # pair key (j, i): x-dim = lower column index for determinism
-            a, b = j, i
-            valid = jnp.asarray(~(nanmask[:, a] | nanmask[:, b]))
-            ex0 = jnp.asarray(pad_edges(hists[a].edges))
-            ey0 = jnp.asarray(pad_edges(hists[b].edges))
-            kx0 = jnp.int32(min(int(hists[a].k), K2))
-            ky0 = jnp.int32(min(int(hists[b].k), K2))
-            x = sample_j[:, a]
-            y = sample_j[:, b]
-            ex, ey, kx, ky = refine.refine_2d(
-                x, y, valid, ex0, ey0, kx0, ky0, jnp.float64(m_pts), crit2,
-                k2=K2, s_max=params.s2_max, max_rounds=params.max_rounds_2d)
-            out = refine.pair_metadata(x, y, valid, ex, ey, kx, ky, k2=K2)
-            H, hx, ux, vminx, vmaxx, hy, uy, vminy, vmaxy = out
-            nkx, nky = int(kx), int(ky)
-            raw_pairs[(a, b)] = PairHist(
-                ex=np.asarray(ex)[: nkx + 1].copy(),
-                ey=np.asarray(ey)[: nky + 1].copy(),
-                kx=np.int32(nkx), ky=np.int32(nky),
-                H=np.asarray(H)[:nkx, :nky].copy(),
-                hx=np.asarray(hx)[:nkx].copy(), ux=np.asarray(ux)[:nkx].copy(),
-                vminx=np.asarray(vminx)[:nkx].copy(),
-                vmaxx=np.asarray(vmaxx)[:nkx].copy(),
-                hy=np.asarray(hy)[:nky].copy(), uy=np.asarray(uy)[:nky].copy(),
-                vminy=np.asarray(vminy)[:nky].copy(),
-                vmaxy=np.asarray(vmaxy)[:nky].copy(),
-                fold_x=np.zeros(0, np.int32), fold_y=np.zeros(0, np.int32),
-            )
+    # --- 3. pair histograms (batched across pairs) -------------------------
+    t_pairs = time.perf_counter()
+    build_stats: dict = {}
+    if params.pair_batched:
+        raw_pairs = build_pairs_batched(sample, hists, params, crit2, m_pts,
+                                        stats=build_stats)
+    else:
+        raw_pairs = build_pairs_sequential(sample, hists, params, crit2,
+                                           m_pts)
+    build_stats.update({
+        "mode": "batched" if params.pair_batched else "sequential",
+        "n_pairs": len(raw_pairs),
+        "pair_phase_s": time.perf_counter() - t_pairs,
+        "pair_chunk": params.pair_chunk,
+    })
 
     # --- 4. refine 1-D grids to the union of their pairs' edge sets --------
     # Aggregation runs on the 1-D grid (Table 3); without this, a uniform
@@ -217,7 +380,7 @@ def build_pairwise_hist(
     # AVG/SUM would see only the global midpoint. The union grid preserves
     # the 2-D refinement (this is what the paper's per-dimension 2-D bin
     # metadata, Fig. 4, buys). Fold maps: 1-D bin -> containing pair row.
-    K1 = params.k1_cap
+    pairs: dict[tuple[int, int], PairHist] = {}
     for i in range(d):
         union = [hists[i].edges]
         for (a, b), pr in raw_pairs.items():
@@ -259,4 +422,5 @@ def build_pairwise_hist(
         hists=hists,
         pairs=pairs,
         chi2_table=crit_np,
+        build_stats=build_stats,
     )

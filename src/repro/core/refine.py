@@ -17,8 +17,18 @@ a sequential NumPy oracle in tests). In 2-D, refinement order can matter
 variant of the same procedure.
 
 All functions are jit-compatible with static capacities; 1-D refinement is
-vmapped across columns, 2-D across pairs is a host loop re-using one compiled
-function (all pairs share shapes).
+vmapped across columns. The 2-D path is *pair-batched*: all pairs of a chunk
+stack into (P, N) tensors, ``refine_2d_batch`` runs ONE ``lax.while_loop``
+that refines every pair level-synchronously (converged pairs are at a fixed
+point — recomputing them yields no new splits), and the per-round inner loop
+(bin index + masked cell counts) dispatches through the batched hist2d
+kernel (``repro.kernels.hist2d.batched_hist2d``: Pallas one-hot matmuls on
+TPU, dtype-preserving scatter-add oracle elsewhere). Each pair is presorted
+once by (x, y) and (y, x) (``presort_pairs``), which turns the former
+per-round ``lexsort`` in ``_slice_unique`` into cheap run-boundary flag
+sums — counts are exact integers, so the batched path is bit-for-bit equal
+to the legacy per-pair ``refine_2d`` loop (asserted in tests).
+``refine_2d``/``pair_metadata`` remain as the single-pair reference path.
 """
 from __future__ import annotations
 
@@ -28,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import chi2 as chi2lib
+from repro.kernels.hist2d import batched_hist2d
 
 _INF = jnp.inf
 
@@ -356,3 +367,279 @@ def pair_metadata(x, y, valid, ex, ey, kx, ky, k2: int):
     hx, ux, vminx, vmaxx = slice_meta(row, x, ex, kx)
     hy, uy, vminy, vmaxy = slice_meta(col, y, ey, ky)
     return H, hx, ux, vminx, vmaxx, hy, uy, vminy, vmaxy
+
+
+# ---------------------------------------------------------------------------
+# Pair-batched 2-D refinement (all pairs of a chunk in one while_loop)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def presort_pairs(x, y, valid):
+    """Per-pair lexsorts, done once per chunk (not per refinement round).
+
+    x/y/valid: (P, N). Invalid rows sort to the tail (+inf keys). Returns
+    the points of every pair in (x, y) order and in (y, x) order plus
+    run-start flags:
+
+      xo1/yo1/vo1/new1: values, validity and x-run starts in (x, y) order;
+      xo2/yo2/vo2/new2: values, validity and y-run starts in (y, x) order.
+
+    Within an x-run (equal x => equal x-bin in any grid), points are sorted
+    by y, so equal y-bins are contiguous — a point starts a new (x-value,
+    y-bin) group iff it starts a run or its y-bin differs from its
+    predecessor. Summing those flags per cell gives the exact distinct-x
+    count per cell with no per-round sort (ditto distinct-y via order 2).
+
+    ``build.build_pairs_batched`` computes the same arrays host-side with
+    ``np.lexsort`` (numpy's sort is much faster than XLA:CPU's); this jitted
+    version serves device-resident callers and tests.
+    """
+    key_x = jnp.where(valid, x, _INF)
+    key_y = jnp.where(valid, y, _INF)
+
+    def one(kx, ky):
+        return jnp.lexsort((ky, kx)), jnp.lexsort((kx, ky))
+
+    o1, o2 = jax.vmap(one)(key_x, key_y)
+
+    def take(a, o):
+        return jnp.take_along_axis(a, o, axis=1)
+
+    xo1, yo1, vo1 = take(x, o1), take(y, o1), take(valid, o1)
+    xo2, yo2, vo2 = take(x, o2), take(y, o2), take(valid, o2)
+    first = jnp.ones((x.shape[0], 1), bool)
+    new1 = jnp.concatenate([first, xo1[:, 1:] != xo1[:, :-1]], axis=1)
+    new2 = jnp.concatenate([first, yo2[:, 1:] != yo2[:, :-1]], axis=1)
+    return xo1, yo1, vo1, new1, xo2, yo2, vo2, new2
+
+
+def _bin_index_b(vals, edges, k):
+    """(P, N) values x (P, K+1) edges -> per-point bin indices, per pair."""
+    idx = jax.vmap(
+        lambda v, e: jnp.searchsorted(e, v, side="right"))(vals, edges) - 1
+    return jnp.clip(idx, 0, jnp.maximum(k[:, None] - 1, 0))
+
+
+def _unique_flags(new_run, other_bin, valid):
+    """First-occurrence flags of each (run, other-dim bin) group (f64)."""
+    prev = jnp.concatenate([other_bin[:, :1], other_bin[:, :-1]], axis=1)
+    return ((new_run | (other_bin != prev)) & valid).astype(jnp.float64)
+
+
+def _subbin_hist_b(vals, lo, width, cell, s, valid, k2: int, s_max: int):
+    """Per-cell sub-bin histogram, batched: (P, ncell, s_max) f64.
+
+    Same flat-id masked segment_sum as ``_cell_chi2`` (exact integer
+    counts); every valid point lands in exactly one live sub-bin, so the
+    last-axis sum reproduces the per-cell totals — the separate h_cell
+    scatter of the legacy path is redundant.
+    """
+    p = vals.shape[0]
+    ncell = k2 * k2
+    s_pt = jnp.take_along_axis(s, cell, axis=1)
+    frac = jnp.where(width > 0, (vals - lo) / width, 0.0)
+    r = jnp.clip((frac * s_pt).astype(jnp.int32), 0, s_pt - 1)
+    flat = jnp.where(valid, cell * s_max + r, ncell * s_max)
+    ones = jnp.ones_like(vals)
+    hbar = jax.vmap(lambda f, o: jax.ops.segment_sum(
+        o, f, num_segments=ncell * s_max + 1))(flat, ones)
+    return hbar[:, :-1].reshape(p, ncell, s_max)
+
+
+def _chi2_from_hbar_b(hbar, h_cell, s, s_max: int, crit_table):
+    """Batched tail of ``_cell_chi2``: identical float ops on (P, ncell)."""
+    sf = jnp.maximum(s.astype(jnp.float64), 1.0)
+    expect = h_cell / sf
+    rr = jnp.arange(s_max)
+    live = rr[None, None, :] < s[:, :, None]
+    num = jnp.where(live, (hbar - expect[:, :, None]) ** 2, 0.0)
+    stat = jnp.sum(num, axis=2) / jnp.maximum(expect, 1e-30)
+    crit = crit_table[jnp.clip(s, 0, crit_table.shape[0] - 1)]
+    return stat, crit
+
+
+@functools.partial(jax.jit, static_argnames=("k2", "s_max", "max_rounds",
+                                             "use_pallas", "interpret"))
+def refine_2d_batch(xo1, yo1, vo1, new1, xo2, yo2, vo2, new2,
+                    ex0, ey0, kx0, ky0, min_points, crit_table, *,
+                    k2: int, s_max: int = 32, max_rounds: int = 16,
+                    use_pallas: bool = False, interpret: bool | None = None):
+    """Refine P pair histograms in one level-synchronous while_loop.
+
+    Inputs are ``presort_pairs`` outputs plus per-pair initial edges
+    ``ex0``/``ey0`` (P, K2+1) and valid-bin counts ``kx0``/``ky0`` (P,).
+    Returns (ex, ey, kx, ky, capped) with leading pair axis.
+
+    Per-pair results are bit-for-bit identical to running ``refine_2d`` on
+    each pair alone: a pair that stops splitting is at a deterministic fixed
+    point, so the extra rounds it sits through while slower pairs converge
+    are no-ops, and every per-cell statistic is an exact integer count or a
+    float computed by the same ops on the same values.
+
+    ``capped[p]`` is True iff pair p's K2-capacity guard ever dropped a
+    wanted split. When False, the result is independent of ``k2`` (any
+    capacity >= the final bin counts yields the same histogram), which is
+    what lets construction refine at a small capacity first and escalate
+    only saturated chunks (``build.build_pairs_batched``).
+    """
+    p = xo1.shape[0]
+    ncell = k2 * k2
+
+    def cond(state):
+        _, _, _, _, n_split, _, rounds = state
+        return jnp.any(n_split > 0) & (rounds < max_rounds)
+
+    def body(state):
+        ex, ey, kx, ky, _, capped, rounds = state
+        bio1 = _bin_index_b(xo1, ex, kx)
+        bjo1 = _bin_index_b(yo1, ey, ky)
+        bio2 = _bin_index_b(xo2, ex, kx)
+        bjo2 = _bin_index_b(yo2, ey, ky)
+        cell1 = bio1 * k2 + bjo1
+        cell2 = bio2 * k2 + bjo2
+
+        ux_cell = batched_hist2d(
+            bio1, bjo1, _unique_flags(new1, bjo1, vo1), k2, k2,
+            use_pallas=use_pallas, interpret=interpret).reshape(p, ncell)
+        uy_cell = batched_hist2d(
+            bio2, bjo2, _unique_flags(new2, bio2, vo2), k2, k2,
+            use_pallas=use_pallas, interpret=interpret).reshape(p, ncell)
+        s_x = chi2lib.num_subbins(ux_cell, s_max)
+        s_y = chi2lib.num_subbins(uy_cell, s_max)
+
+        lox = jnp.take_along_axis(ex, bio1, axis=1)
+        wx = jnp.take_along_axis(ex, bio1 + 1, axis=1) - lox
+        loy = jnp.take_along_axis(ey, bjo2, axis=1)
+        wy = jnp.take_along_axis(ey, bjo2 + 1, axis=1) - loy
+        hbar_x = _subbin_hist_b(xo1, lox, wx, cell1, s_x, vo1, k2, s_max)
+        hbar_y = _subbin_hist_b(yo2, loy, wy, cell2, s_y, vo2, k2, s_max)
+        h_cell = jnp.sum(hbar_x, axis=2)
+        stat_x, crit_x = _chi2_from_hbar_b(hbar_x, h_cell, s_x, s_max,
+                                           crit_table)
+        stat_y, crit_y = _chi2_from_hbar_b(hbar_y, h_cell, s_y, s_max,
+                                           crit_table)
+
+        eligible = h_cell > min_points
+        fail_x = eligible & (ux_cell > 1.0) & (stat_x > crit_x)
+        fail_y = eligible & (uy_cell > 1.0) & (stat_y > crit_y)
+        exc_x = jnp.where(fail_x, stat_x / jnp.maximum(crit_x, 1e-30), -1.0)
+        exc_y = jnp.where(fail_y, stat_y / jnp.maximum(crit_y, 1e-30), -1.0)
+        pick_x = fail_x & (~fail_y | (exc_x >= exc_y))
+        pick_y = fail_y & ~pick_x
+
+        # cell (ti, tj) -> whole row/column wants a split (Fig. 5).
+        want_x = pick_x.reshape(p, k2, k2).any(axis=2)
+        want_y = pick_y.reshape(p, k2, k2).any(axis=1)
+
+        tK = jnp.arange(k2)[None, :]
+        zx = 0.5 * (ex[:, :-1] + ex[:, 1:])
+        zy = 0.5 * (ey[:, :-1] + ey[:, 1:])
+        ok_x = want_x & (tK < kx[:, None]) & (zx > ex[:, :-1]) & (zx < ex[:, 1:])
+        ok_y = want_y & (tK < ky[:, None]) & (zy > ey[:, :-1]) & (zy < ey[:, 1:])
+        nwx = jnp.sum(ok_x, axis=1, dtype=jnp.int32)   # wanted, pre-guard
+        nwy = jnp.sum(ok_y, axis=1, dtype=jnp.int32)
+        capped = capped | (nwx > k2 - kx) | (nwy > k2 - ky)
+        rank_x = jnp.cumsum(ok_x.astype(jnp.int32), axis=1) - 1
+        rank_y = jnp.cumsum(ok_y.astype(jnp.int32), axis=1) - 1
+        ok_x = ok_x & (rank_x < (k2 - kx)[:, None])
+        ok_y = ok_y & (rank_y < (k2 - ky)[:, None])
+        nx = jnp.sum(ok_x, axis=1, dtype=jnp.int32)
+        ny = jnp.sum(ok_y, axis=1, dtype=jnp.int32)
+
+        ex = jnp.sort(jnp.concatenate(
+            [ex, jnp.where(ok_x, zx, _INF)], axis=1), axis=1)[:, : k2 + 1]
+        ey = jnp.sort(jnp.concatenate(
+            [ey, jnp.where(ok_y, zy, _INF)], axis=1), axis=1)[:, : k2 + 1]
+        return (ex, ey, (kx + nx).astype(jnp.int32),
+                (ky + ny).astype(jnp.int32),
+                (nx + ny).astype(jnp.int32), capped, rounds + 1)
+
+    state = (ex0, ey0, kx0.astype(jnp.int32), ky0.astype(jnp.int32),
+             jnp.ones(p, jnp.int32), jnp.zeros(p, bool), jnp.int32(0))
+    ex, ey, kx, ky, _, capped, _ = jax.lax.while_loop(cond, body, state)
+    return ex, ey, kx, ky, capped
+
+
+@functools.partial(jax.jit, static_argnames=("k2", "use_pallas", "interpret"))
+def pair_metadata_batch(xo1, yo1, vo1, new1, xo2, yo2, vo2, new2,
+                        ex, ey, kx, ky, *, k2: int,
+                        use_pallas: bool = False,
+                        interpret: bool | None = None):
+    """Batched ``pair_metadata``: (P, ...) in, (P, ...) out, same values.
+
+    The count matrix routes through the batched hist2d kernel; everything
+    per-dimension comes from the presorted order *without scatters*: a
+    row's points are a contiguous slice of the (x, y)-sorted array (bin
+    index depends on x alone), so row extrema are the slice ends and
+    distinct counts are prefix-sum differences of the run flags — exactly
+    the values the legacy segment ops produce.
+    """
+    p, n = xo1.shape
+    bio1 = _bin_index_b(xo1, ex, kx)
+    bjo1 = _bin_index_b(yo1, ey, ky)
+    ones1 = jnp.where(vo1, 1.0, 0.0)
+    H = batched_hist2d(bio1, bjo1, ones1, k2, k2, use_pallas=use_pallas,
+                       interpret=interpret)                    # (P, K2, K2)
+    hx = H.sum(axis=2)
+    hy = H.sum(axis=1)
+    nv = jnp.sum(vo1, axis=1)                                  # (P,)
+
+    def slice_meta(vals_sorted, valid_sorted, run_flags, edges, k):
+        keyed = jnp.where(valid_sorted, vals_sorted, _INF)
+        pos = jax.vmap(lambda kv, e: jnp.searchsorted(
+            kv, e, side="left"))(keyed, edges)                 # (P, K2+1)
+        t = jnp.arange(k2)[None, :]
+        lo = pos[:, :-1]
+        # Half-open bins except the last valid one (closed): its slice runs
+        # to the end of the valid prefix.
+        hi = jnp.where(t == k[:, None] - 1, nv[:, None], pos[:, 1:])
+        hi = jnp.maximum(hi, lo)
+        up = jnp.cumsum((run_flags & valid_sorted).astype(jnp.float64),
+                        axis=1)
+        up = jnp.concatenate([jnp.zeros((p, 1), jnp.float64), up], axis=1)
+        uu = jnp.take_along_axis(up, hi, axis=1) - \
+            jnp.take_along_axis(up, lo, axis=1)
+        vmin = jnp.take_along_axis(vals_sorted,
+                                   jnp.clip(lo, 0, n - 1), axis=1)
+        vmax = jnp.take_along_axis(vals_sorted,
+                                   jnp.clip(hi - 1, 0, n - 1), axis=1)
+        return uu, vmin, vmax
+
+    ux, vminx, vmaxx = slice_meta(xo1, vo1, new1, ex, kx)
+    uy, vminy, vmaxy = slice_meta(yo2, vo2, new2, ey, ky)
+
+    empty_x = hx == 0
+    vminx = jnp.where(empty_x, ex[:, :-1], vminx)
+    vmaxx = jnp.where(empty_x, ex[:, 1:], vmaxx)
+    ux = jnp.where(empty_x, 0.0, ux)
+    empty_y = hy == 0
+    vminy = jnp.where(empty_y, ey[:, :-1], vminy)
+    vmaxy = jnp.where(empty_y, ey[:, 1:], vmaxy)
+    uy = jnp.where(empty_y, 0.0, uy)
+    return H, hx, ux, vminx, vmaxx, hy, uy, vminy, vmaxy
+
+
+@functools.partial(jax.jit, static_argnames=("k2", "s_max", "max_rounds",
+                                             "use_pallas", "interpret"))
+def build_pairs_device(xo1, yo1, vo1, new1, xo2, yo2, vo2, new2,
+                       ex0, ey0, kx0, ky0, min_points,
+                       crit_table, *, k2: int, s_max: int = 32,
+                       max_rounds: int = 16, use_pallas: bool = False,
+                       interpret: bool | None = None):
+    """Batched refine + batched metadata as ONE compiled unit.
+
+    Takes presorted chunk arrays (``presort_pairs`` layout — device- or
+    host-produced). Everything for a chunk of P pairs runs in a single
+    dispatch; the caller fetches all results in one grouped device->host
+    transfer. Returns
+    (ex, ey, kx, ky, capped, H, hx, ux, vminx, vmaxx, hy, uy, vminy, vmaxy).
+    """
+    pres = (xo1, yo1, vo1, new1, xo2, yo2, vo2, new2)
+    ex, ey, kx, ky, capped = refine_2d_batch(
+        *pres, ex0, ey0, kx0, ky0, min_points, crit_table, k2=k2,
+        s_max=s_max, max_rounds=max_rounds, use_pallas=use_pallas,
+        interpret=interpret)
+    meta = pair_metadata_batch(*pres, ex, ey, kx, ky, k2=k2,
+                               use_pallas=use_pallas, interpret=interpret)
+    return (ex, ey, kx, ky, capped) + meta

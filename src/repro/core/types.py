@@ -40,6 +40,18 @@ class BuildParams:
     max_rounds_1d: int = 64           # refinement rounds (== max recursion depth)
     max_rounds_2d: int = 16
     use_pallas: bool = False          # route 2-D binning through the Pallas kernel
+    # Pair-batched construction (the 2-D hot path). ``pair_chunk`` bounds how
+    # many pairs refine per launch (memory ~ pair_chunk * k2_cap^2 * s2_max);
+    # launch sizes bucket to powers of two (pair_chunk rounds DOWN so the
+    # memory bound is honoured) to bound jit recompiles.
+    pair_batched: bool = True         # batched 2-D path vs legacy per-pair loop
+    pair_chunk: int = 8               # max pairs per batched launch (pow-2)
+    # Adaptive 2-D capacity: chunks refine at the smallest rung of the
+    # doubling ladder k2_start, 2*k2_start, ..., k2_cap that fits their
+    # initial grids, escalating only when the capacity guard binds (the
+    # result is capacity-independent otherwise). Real pair grids are tens of
+    # bins, so the k2_cap^2 * s2_max chi-squared workspace shrinks ~16x.
+    k2_start: int = 64                # first rung of the capacity ladder
 
     @property
     def min_points(self) -> int:
@@ -153,6 +165,9 @@ class PairwiseHist:
     hists: list                         # list[Hist1D]   (numpy, trimmed to k)
     pairs: dict                         # {(i, j) i<j : PairHist} (numpy, trimmed)
     chi2_table: np.ndarray              # chi2 critical values, indexed by s
+    # Construction telemetry (pair-phase wall time, mode, launch sizes);
+    # in-memory only, not serialized.
+    build_stats: dict = dataclasses.field(default_factory=dict)
 
     @property
     def d(self) -> int:

@@ -1,1 +1,1 @@
-from repro.kernels.hist2d.ops import hist2d  # noqa: F401
+from repro.kernels.hist2d.ops import batched_hist2d, hist2d  # noqa: F401

@@ -57,3 +57,49 @@ def hist2d_pallas(bi, bj, weights, ki: int, kj: int, tn: int = 1024,
         out_shape=jax.ShapeDtypeStruct((ki, kj), jnp.float32),
         interpret=interpret,
     )(bi, bj, weights)
+
+
+def _batched_kernel(bi_ref, bj_ref, w_ref, out_ref, *, ki: int, kj: int,
+                    tn: int):
+    """One grid step = (pair p, row tile t): accumulate into pair p's plane."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bi = bi_ref[0]                                     # (TN,) i32
+    bj = bj_ref[0]
+    w = w_ref[0].astype(jnp.float32)
+    rows_i = jax.lax.broadcasted_iota(jnp.int32, (tn, ki), 1)
+    rows_j = jax.lax.broadcasted_iota(jnp.int32, (tn, kj), 1)
+    oh_i = (rows_i == bi[:, None]).astype(jnp.float32)             # (TN, KI)
+    oh_j = (rows_j == bj[:, None]).astype(jnp.float32) * w[:, None]
+    out_ref[0] += jax.lax.dot_general(
+        oh_i, oh_j, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (KI, KJ)
+
+
+@functools.partial(jax.jit, static_argnames=("ki", "kj", "tn", "interpret"))
+def batched_hist2d_pallas(bi, bj, weights, ki: int, kj: int, tn: int = 1024,
+                          interpret: bool = True):
+    """Pair-batched 2-D histogram: (P, N) indices/weights -> (P, KI, KJ).
+
+    The grid is (P, N // tn); each pair's accumulator plane lives in VMEM
+    across its row tiles (tiles are the innermost grid dimension, so a
+    pair's steps are contiguous and the revisited output block stays
+    resident). Rows with out-of-histogram indices must carry weight 0.
+    """
+    p, n = bi.shape
+    assert n % tn == 0, "pad N to a multiple of the row tile in ops.py"
+    grid = (p, n // tn)
+    return pl.pallas_call(
+        functools.partial(_batched_kernel, ki=ki, kj=kj, tn=tn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tn), lambda pi, ti: (pi, ti)),
+            pl.BlockSpec((1, tn), lambda pi, ti: (pi, ti)),
+            pl.BlockSpec((1, tn), lambda pi, ti: (pi, ti)),
+        ],
+        out_specs=pl.BlockSpec((1, ki, kj), lambda pi, ti: (pi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, ki, kj), jnp.float32),
+        interpret=interpret,
+    )(bi, bj, weights)

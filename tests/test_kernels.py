@@ -3,8 +3,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.hist2d import hist2d
-from repro.kernels.hist2d.ref import hist2d_ref
+from repro.kernels.hist2d import batched_hist2d, hist2d
+from repro.kernels.hist2d.ref import batched_hist2d_ref, hist2d_ref
 from repro.kernels.weightings import batched_weightings, fused_weightings
 from repro.kernels.weightings.ref import (batched_weightings_ref,
                                           fused_weightings_ref)
@@ -36,6 +36,44 @@ def test_hist2d_weight_dtypes(wdtype):
                      jnp.asarray(w, jnp.float32), ki, kj)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
     assert float(out.sum()) == pytest.approx(float(w.sum()))
+
+
+@pytest.mark.parametrize("p,n,ki,kj", [
+    (1, 100, 8, 8), (3, 500, 37, 53), (2, 2048, 128, 256), (4, 1000, 300, 17),
+])
+def test_batched_hist2d_matches_ref(p, n, ki, kj):
+    """Pair-batched Pallas kernel == oracle == per-pair single kernel."""
+    rng = np.random.default_rng(p * n + ki)
+    bi = rng.integers(0, ki, (p, n)).astype(np.int32)
+    bj = rng.integers(0, kj, (p, n)).astype(np.int32)
+    w = rng.random((p, n)).astype(np.float32)
+    out = batched_hist2d(bi, bj, w, ki, kj, use_pallas=True)
+    ref = batched_hist2d_ref(jnp.asarray(bi), jnp.asarray(bj),
+                             jnp.asarray(w), ki, kj)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    for pi in range(p):
+        single = hist2d_ref(jnp.asarray(bi[pi]), jnp.asarray(bj[pi]),
+                            jnp.asarray(w[pi]), ki, kj)
+        np.testing.assert_allclose(np.asarray(out)[pi], np.asarray(single),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_batched_hist2d_integer_counts_exact():
+    """Construction feeds f64 ones/flags: counts must be exact integers and
+    identical between the Pallas path (f32 accumulate) and the f64 oracle."""
+    import repro.core  # noqa: F401  (enables jax x64 for the f64 oracle)
+    rng = np.random.default_rng(1)
+    p, n, k = 3, 4000, 24
+    bi = rng.integers(0, k, (p, n)).astype(np.int32)
+    bj = rng.integers(0, k, (p, n)).astype(np.int32)
+    w = (rng.random((p, n)) < 0.9).astype(np.float64)  # 0/1 validity weights
+    pal = np.asarray(batched_hist2d(bi, bj, w, k, k, use_pallas=True))
+    ora = np.asarray(batched_hist2d(bi, bj, w, k, k, use_pallas=False))
+    np.testing.assert_array_equal(pal, ora)
+    assert ora.dtype == np.float64
+    np.testing.assert_array_equal(ora, np.round(ora))
+    assert float(ora.sum()) == float(w.sum())
 
 
 @pytest.mark.parametrize("el,k2,k1", [
