@@ -22,6 +22,20 @@ fused Pallas launch on TPU and NumPy execution on CPU (where per-launch
 JAX dispatch is the overhead, not the savings); the fused path's
 engagement is additionally reported as explicit ``fused_ref`` rows so the
 batched kernel is exercised on every backend.
+
+Two further modes (PR 3):
+
+  * streaming — the same Zipf stream submitted through ``AQPServer.submit``
+    under **Poisson arrivals** at ~70% of the measured batch-64 capacity;
+    reports client-observed p50/p99 latency (submit -> future resolution,
+    admission wait included) and sustained qps, plus the admission drain
+    telemetry. This is the traffic-shaped serving model the synchronous
+    sweeps approximate from above.
+  * groupby — a GROUP BY template pool over ``flights.airline`` (14
+    categories / leaves per query), per-query ``AQPFramework.query`` vs
+    ``query_batch`` at batch 16/64 (acceptance: > 2x qps at batch >= 16 —
+    the planning-time leaf expansion + per-leaf result cache + fused leaf
+    launches vs the sequential per-category loop).
 """
 from __future__ import annotations
 
@@ -91,6 +105,70 @@ def _serve_qps(frameworks, workload, batch_size, mode):
     return len(workload) / wall, stats
 
 
+def _groupby_pool(table: dict, name: str, group_col: str, rng,
+                  n_templates: int, variants: int) -> list[str]:
+    """GROUP BY templates: fixed (func, agg col, predicate col, group col);
+    literals vary across ``variants`` instances."""
+    numeric = [c for c in table
+               if np.asarray(table[c]).dtype.kind not in ("U", "S", "O")]
+    pool = []
+    for _ in range(n_templates):
+        func = rng.choice(("COUNT", "SUM", "AVG"))
+        agg_col = rng.choice(numeric)
+        pred_col = rng.choice([c for c in numeric if c != agg_col])
+        op = rng.choice(("<", "<=", ">", ">="))
+        for _ in range(variants):
+            x = np.asarray(table[pred_col], float)
+            x = x[np.isfinite(x)]
+            lit = float(np.quantile(x, rng.uniform(0.1, 0.9)))
+            pool.append(f"SELECT {func}({agg_col}) FROM {name} "
+                        f"WHERE {pred_col} {op} {lit:.4f} "
+                        f"GROUP BY {group_col}")
+    return pool
+
+
+def _streaming_run(frameworks, workload, rate_qps: float, rng):
+    """Submit ``workload`` through the async path under Poisson arrivals.
+
+    Client-observed latency = submit -> future resolution (admission wait +
+    queueing + execution share). Returns qps/p50/p99 + admission telemetry.
+    """
+    srv = AQPServer()
+    for name, fw in frameworks.items():
+        srv.register(name, fw)
+    done_at: dict[int, float] = {}
+    submitted_at: list[float] = []
+    futs = []
+    t0 = time.perf_counter()
+    t_next = t0
+    for sql, _name in workload:
+        now = time.perf_counter()
+        if t_next > now:
+            time.sleep(t_next - now)
+        submitted_at.append(time.perf_counter())
+        fut = srv.submit(sql)
+        idx = len(futs)
+        fut.add_done_callback(
+            lambda f, i=idx: done_at.__setitem__(i, time.perf_counter()))
+        futs.append(fut)
+        t_next += rng.exponential(1.0 / rate_qps)
+    srv.flush()
+    for fut in futs:
+        fut.result()
+    wall = time.perf_counter() - t0
+    lat_ms = 1e3 * (np.array([done_at[i] for i in range(len(futs))])
+                    - np.array(submitted_at))
+    stats = srv.stats()
+    srv.close()
+    return {
+        "offered_qps": rate_qps,
+        "qps": len(futs) / wall,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "admission": stats["totals"]["admission"],
+    }
+
+
 def run(rows: list, quick: bool = False):
     rng = np.random.default_rng(0)
     n = 60_000 if quick else 120_000
@@ -156,6 +234,54 @@ def run(rows: list, quick: bool = False):
     emit(rows, "serving/qps_b64_fused_ref", 1e6 / qps_fused,
          f"{qps_fused:.0f} qps ({qps_fused / qps_base:.1f}x, "
          f"batched={out['fused_batched_fraction']:.2f})")
+
+    # Streaming admission under Poisson arrivals at ~70% of batch capacity:
+    # client-observed latency percentiles + sustained throughput.
+    n_stream = 256 if quick else 512
+    rate = max(min(0.7 * out["qps_b64"], 5_000.0), 50.0)
+    stream_wl = _zipf_stream(rng, pool, n_stream)
+    out["streaming"] = _streaming_run(frameworks, stream_wl, rate, rng)
+    emit(rows, "serving/streaming_qps", 1e6 / out["streaming"]["qps"],
+         f"{out['streaming']['qps']:.0f} qps "
+         f"(offered {out['streaming']['offered_qps']:.0f})")
+    emit(rows, "serving/streaming_p50_ms", None,
+         f"{out['streaming']['p50_ms']:.2f} ms")
+    emit(rows, "serving/streaming_p99_ms", None,
+         f"{out['streaming']['p99_ms']:.2f} ms")
+
+    # GROUP BY batching: per-category leaf expansion through the batched
+    # path + per-leaf result cache, vs the sequential per-category loop.
+    gb_templates = 3 if quick else 5
+    gb_variants = 8 if quick else 12
+    gb_requests = 192 if quick else 384
+    fl_table = load("flights", n=n)
+    gb_pool = [(sql, "flights") for sql in _groupby_pool(
+        fl_table, "flights", "airline", rng, gb_templates, gb_variants)]
+    gb_wl = _zipf_stream(rng, gb_pool, gb_requests)
+
+    t0 = time.perf_counter()
+    for sql, name in gb_wl:
+        frameworks[name].query(sql)
+    qps_gb_base = len(gb_wl) / (time.perf_counter() - t0)
+    out["groupby"] = {"pool": len(gb_pool), "requests": gb_requests,
+                      "qps_baseline": qps_gb_base}
+    emit(rows, "serving/groupby_qps_baseline", 1e6 / qps_gb_base,
+         f"{qps_gb_base:.0f} qps")
+    gstats = None
+    for bs in (16, 64):
+        qps_gb, gstats = _serve_qps(frameworks, gb_wl, bs, mode=None)
+        out["groupby"][f"qps_b{bs}"] = qps_gb
+        out["groupby"][f"speedup_b{bs}"] = qps_gb / qps_gb_base
+        emit(rows, f"serving/groupby_qps_b{bs}", 1e6 / qps_gb,
+             f"{qps_gb:.0f} qps ({qps_gb / qps_gb_base:.1f}x)")
+    gb_tm = gstats["tables"]["flights"]["group_by"]
+    out["groupby"]["leaves_executed"] = gb_tm["leaves_executed"]
+    out["groupby"]["leaf_cache_hits"] = gb_tm["leaf_cache_hits"]
+    # Fused leaf launches (jnp oracle of the batched kernel) for the record.
+    qps_gb_fused, _ = _serve_qps(frameworks, gb_wl, 64, mode="ref")
+    out["groupby"]["qps_b64_fused_ref"] = qps_gb_fused
+    emit(rows, "serving/groupby_speedup_b16", None,
+         f"{out['groupby']['speedup_b16']:.1f}x")
 
     save_json("serving", out)
     return out

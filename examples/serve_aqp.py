@@ -1,25 +1,37 @@
-"""Multi-table AQP serving demo: catalog + batched execution + caches.
+"""Multi-table AQP serving demo: streaming admission + batched execution.
 
 The single-table ``AQPFramework`` answers one query at a time; the serving
-subsystem (``repro.serve.aqp``) turns it into a multi-tenant query server:
+subsystem (``repro.serve.aqp``, reference: docs/serving.md) turns it into
+a multi-tenant query server:
 
   * **TableCatalog** — registers many named tables, so ``FROM <table>``
     actually resolves (unknown tables raise ``PlanError``);
-  * **BatchScheduler** — groups each wave of queries by plan shape
+  * **streaming admission** — ``submit`` enqueues and returns a
+    ``QueryFuture`` immediately; an admission worker drains the queue into
+    waves under a latency/batch-size policy and resolves futures as waves
+    complete (``query_batch`` is the synchronous submit+flush+wait
+    wrapper);
+  * **BatchScheduler** — groups in-flight queries by plan shape
     (table, agg column, predicate column set) and runs every group as ONE
     fused query-batched kernel launch (``kernels.weightings
-    .batched_weightings``; OR-trees/GROUP BY fall back per query);
-  * **LRU plan + result caches** — keyed on normalized SQL and the owning
-    table's staleness epoch, so ``append_rows`` invalidates rather than
-    serves stale results;
-  * **Metrics** — per-table p50/p99 latency, throughput, cache hit rates.
+    .batched_weightings``); GROUP BY queries expand into per-category leaf
+    plans at planning time and their leaves ride the same fused launches
+    (OR-trees fall back per query);
+  * **LRU plan + result caches** — keyed on normalized SQL (plus
+    plan-canonical per-leaf keys for GROUP BY) and the owning table's
+    staleness epoch, so ``append_rows`` invalidates rather than serves
+    stale results;
+  * **Metrics** — per-table p50/p99 latency, throughput, cache hit rates,
+    GROUP BY expansion counters, admission queue/wait/drain telemetry.
 
 Run:
 
     PYTHONPATH=src python examples/serve_aqp.py
 
-Benchmark (throughput vs batch size + cache-hit sweep; acceptance target
-is >= 5x queries/sec at batch 64 vs one-at-a-time AQPFramework.query):
+Benchmark (throughput vs batch size, cache-hit sweep, streaming p50/p99
+under Poisson arrivals, GROUP BY batching; acceptance targets: >= 5x
+queries/sec at batch 64 and > 2x for GROUP BY at batch 16 vs one-at-a-time
+AQPFramework.query):
 
     PYTHONPATH=src python -m benchmarks.bench_serving          # quick
     PYTHONPATH=src python -m benchmarks.run --only serving     # full
@@ -64,6 +76,23 @@ def main():
     for sql, res in zip(wave, srv.query_batch(wave)):
         est, lo, hi = res.as_tuple()
         print(f"  {sql}\n    -> {est:,.1f}  [{lo:,.1f}, {hi:,.1f}]")
+
+    print("\n== GROUP BY rides the batched path (per-category leaf plans) ==")
+    res = srv.query("SELECT AVG(arr_delay) FROM flights "
+                    "WHERE distance > 500 GROUP BY airline")
+    for value, (est, lo, hi) in sorted(res.groups.items())[:5]:
+        print(f"  {value}: {est:,.1f}  [{lo:,.1f}, {hi:,.1f}]")
+    print(f"  ... {len(res.groups)} groups; group_by telemetry: "
+          f"{srv.stats()['tables']['flights']['group_by']}")
+
+    print("\n== streaming: submit returns futures, waves resolve them ==")
+    futures = [srv.submit(sql) for sql in wave * 2]   # dupes dedupe in-flight
+    srv.flush()
+    results = [fut.result() for fut in futures]
+    print(f"  {len(futures)} submitted, "
+          f"{sum(r.estimate is not None for r in results)} resolved; "
+          f"admission: "
+          f"{json.dumps(srv.stats()['totals']['admission'], default=float)}")
 
     print("\n== repeated query: served from the result cache ==")
     srv.query(wave[0])

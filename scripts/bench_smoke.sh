@@ -1,13 +1,16 @@
 #!/usr/bin/env bash
-# CI perf smoke: quick construction benchmark + JSON snapshot.
+# CI perf smoke: quick construction + serving benchmarks + JSON snapshots.
 #
 # Runs the construction suite (full-build comparison + the 2-D pair phase
-# legacy-loop-vs-batched comparison with pairs/sec) in --quick mode and
-# snapshots the JSON artifact to BENCH_construction.json at the repo root
-# so the perf trajectory is tracked in-tree.
+# legacy-loop-vs-batched comparison with pairs/sec) and the serving suite
+# (batched/streaming/GROUP BY throughput + latency percentiles) in --quick
+# mode and snapshots the JSON artifacts to BENCH_construction.json /
+# BENCH_serving.json at the repo root so the perf trajectory is tracked
+# in-tree. Field reference: docs/benchmarks.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
-    --only construction --quick "$@"
+    --only construction,serving --quick "$@"
 cp benchmarks/results/construction.json BENCH_construction.json
-echo "wrote BENCH_construction.json"
+cp benchmarks/results/serving.json BENCH_serving.json
+echo "wrote BENCH_construction.json BENCH_serving.json"

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
-# Fast tier-1 smoke lane: the ROADMAP tier-1 command minus @slow tests.
+# Fast tier-1 smoke lane: docs lint + the ROADMAP tier-1 command minus
+# @slow tests.
 #
 #   scripts/tier1.sh            # -m "not slow", fail-fast, quiet
 #   scripts/tier1.sh -k serving # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
+scripts/check_docs.sh
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q -m "not slow" "$@"

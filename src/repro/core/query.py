@@ -39,6 +39,25 @@ class PlanError(ValueError):
     pass
 
 
+def tree_key(tree) -> str:
+    """Deterministic serialization of an encoded predicate tree.
+
+    Used as the canonical-identity component of plan/leaf cache keys: two
+    trees with equal structure, columns, ops and encoded literals produce the
+    same key regardless of the SQL text they were parsed from. ``None``
+    (no WHERE) serializes to ``"T"``.
+    """
+    if tree is None:
+        return "T"
+    if isinstance(tree, wlib.Leaf):
+        return f"L({tree.col},{tree.op},{tree.value!r})"
+    if isinstance(tree, wlib.Consolidated):
+        ivs = ",".join(f"[{lo!r},{hi!r}]" for lo, hi in tree.intervals)
+        return f"C({tree.col},{ivs})"
+    children = ";".join(tree_key(ch) for ch in tree.children)
+    return f"N({tree.kind}:{children})"
+
+
 @dataclasses.dataclass
 class QueryPlan:
     """A planned query: encoded/consolidated predicate tree + resolved columns.
@@ -47,6 +66,15 @@ class QueryPlan:
     encodings, consolidation grids), not on the histogram counts, so they are
     reusable across executions and cacheable by the serving layer as long as
     the synopsis generation ("epoch") is unchanged.
+
+    GROUP BY plans are expanded at planning time into per-category **leaf
+    plans** (``leaf_plans``): leaf ``i`` is the same aggregation with the
+    predicate ``group_col = code_i`` AND-ed onto the WHERE tree and
+    ``group_by=None``. All leaves of a GROUP BY share one batch-execution
+    plan shape, so the serving scheduler can run every leaf of every
+    in-flight GROUP BY as part of one fused ``batched_weightings`` launch;
+    ``group_values[i]`` is the decoded category value leaf ``i`` reports
+    under.
     """
 
     func: str                 # aggregation function
@@ -55,6 +83,21 @@ class QueryPlan:
     group_by: int | None
     table: str | None = None  # FROM clause (resolved by the serving catalog)
     exec_col: int | None = None  # column whose weightings drive execution
+    # GROUP BY expansion (populated by plan_query for categorical group_by).
+    leaf_plans: tuple = ()    # tuple[QueryPlan]: per-category leaf plans
+    group_values: tuple = ()  # decoded category values aligned with leaf_plans
+
+    def canonical_key(self) -> str:
+        """Text-independent identity of this plan's *semantics*.
+
+        Two plans compare equal iff they run the same aggregation over the
+        same encoded predicate tree — regardless of the SQL text they came
+        from (clause order, whitespace, redundant parentheses). The serving
+        layer keys per-leaf result-cache entries on this, so overlapping
+        GROUP BY queries (and textual variants of one query) share entries.
+        """
+        return (f"{self.table}|{self.func}|{self.agg_col}|"
+                f"{self.group_by}|{tree_key(self.tree)}")
 
     def and_leaves(self):
         """Leaves of a pure-AND tree, or None (OR / no WHERE)."""
@@ -85,6 +128,23 @@ class QueryPlan:
         return (self.exec_col, tuple(sorted(pair_cols)))
 
 
+def assemble_groups(plan: QueryPlan, leaf_results: dict) -> QueryResult:
+    """Per-leaf ``QueryResult``s -> one GROUP BY ``QueryResult``.
+
+    ``leaf_results`` maps leaf index -> result. Matches the sequential
+    ``_group_by`` contract exactly: a category appears in ``groups`` iff its
+    estimate is non-null and positive. Shared by the engine's own leaf path
+    and the serving layer (which supplies leaf results from the batched
+    kernel launch and the per-leaf result cache).
+    """
+    groups = {}
+    for i, value in enumerate(plan.group_values):
+        res = leaf_results.get(i)
+        if res is not None and res.estimate is not None and res.estimate > 0:
+            groups[value] = res.as_tuple()
+    return QueryResult(None, None, None, groups=groups)
+
+
 class QueryEngine:
     """Executes the paper's query templates against a PairwiseHist synopsis."""
 
@@ -105,21 +165,64 @@ class QueryEngine:
         return self.plan_query(sqlmod.parse_sql(sql_text))
 
     def plan_query(self, q: sqlmod.ParsedQuery) -> QueryPlan:
-        """Parsed query -> reusable QueryPlan (encode + consolidate)."""
+        """Parsed query -> reusable QueryPlan (encode + consolidate).
+
+        GROUP BY queries are additionally expanded into per-category leaf
+        plans here (``QueryPlan.leaf_plans``), so downstream executors can
+        treat each category as an ordinary single-result plan — in
+        particular, batch all leaves through the fused kernel path.
+        """
         tree = self._plan(q.where)
         agg_col = None if q.agg_col == "*" else self.ph.col_index(q.agg_col)
         gcol = None if q.group_by is None else self.ph.col_index(q.group_by)
         exec_col = agg_col
         if agg_col is None and tree is not None:   # COUNT(*) with WHERE
             exec_col = min(self._tree_cols(tree, set()))
-        return QueryPlan(q.func, agg_col, tree, gcol, q.table, exec_col)
+        plan = QueryPlan(q.func, agg_col, tree, gcol, q.table, exec_col)
+        if gcol is not None:
+            plan.leaf_plans, plan.group_values = \
+                self._expand_group_by(plan, gcol)
+        return plan
 
-    def execute_plan(self, plan: QueryPlan,
-                     weightings=None) -> QueryResult:
+    def _expand_group_by(self, plan: QueryPlan, gcol: int):
+        """GROUP BY plan -> per-category leaf plans (planning-time expansion).
+
+        Leaf trees are built exactly like the sequential ``_group_by`` loop
+        (``Node("and", [Leaf(gcol, "=", code), tree])``), so executing a leaf
+        plan is bit-for-bit identical to the unbatched per-category path.
+        """
+        col = self.ph.columns[gcol]
+        if col.kind != "categorical":
+            raise PlanError(
+                f"GROUP BY requires a categorical column, got {col.name!r}")
+        leaves, values = [], []
+        for code, value in enumerate(col.categories):
+            leaf = wlib.Leaf(gcol, "=", float(code))
+            sub = leaf if plan.tree is None else \
+                wlib.Node("and", [leaf, plan.tree])
+            exec_col = plan.agg_col
+            if exec_col is None:                   # COUNT(*): cheapest column
+                exec_col = min(self._tree_cols(sub, set()))
+            leaves.append(QueryPlan(plan.func, plan.agg_col, sub, None,
+                                    plan.table, exec_col))
+            values.append(value)
+        return tuple(leaves), tuple(values)
+
+    def execute_plan(self, plan: QueryPlan, weightings=None,
+                     leaf_results=None) -> QueryResult:
         """Execute a plan; ``weightings`` optionally supplies a precomputed
-        (w, wlo, whi) triple (e.g. from a fused batched kernel launch)."""
+        (w, wlo, whi) triple (e.g. from a fused batched kernel launch).
+
+        GROUP BY plans execute their planning-time leaf expansion:
+        ``leaf_results`` optionally supplies precomputed per-leaf
+        ``QueryResult``s keyed by leaf index (e.g. from a batched serving
+        launch or a per-leaf result cache); missing leaves execute here via
+        the same ``_single`` path as the sequential oracle.
+        """
         t0 = time.perf_counter()
-        if plan.group_by is not None:
+        if plan.leaf_plans:
+            result = self._assemble_groups(plan, leaf_results or {})
+        elif plan.group_by is not None:    # unexpanded plan: sequential path
             result = self._group_by(plan.func, plan.agg_col, plan.tree,
                                     plan.group_by)
         else:
@@ -127,6 +230,14 @@ class QueryEngine:
                                   w_triple=weightings)
         result.latency_s = time.perf_counter() - t0
         return result
+
+    def _assemble_groups(self, plan: QueryPlan, leaf_results) -> QueryResult:
+        """Execute any missing GROUP BY leaves, then assemble the groups."""
+        full = dict(leaf_results)
+        for i, leaf in enumerate(plan.leaf_plans):
+            if i not in full:
+                full[i] = self._single(leaf.func, leaf.agg_col, leaf.tree)
+        return assemble_groups(plan, full)
 
     def execute(self, func: str, agg_col: int | None, tree,
                 group_by: int | None = None) -> QueryResult:

@@ -1,7 +1,12 @@
-# Pallas-TPU kernels for the paper's two compute hot-spots (DESIGN.md §3):
-#   hist2d     — 2-D bin counting as one-hot matmuls on the MXU (construction)
-#   weightings — fused multi-predicate H@beta -> fold -> Hadamard product
-#                chain (query execution: "a handful of small matmuls" fused
-#                into ONE kernel launch)
-# Each: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper with
-# padding + CPU-interpret fallback), ref.py (pure-jnp oracle).
+"""Pallas-TPU kernels for the paper's two compute hot-spots (DESIGN.md §3):
+
+  * ``hist2d`` — 2-D bin counting as one-hot matmuls on the MXU
+    (construction);
+  * ``weightings`` — fused multi-predicate H@beta -> fold -> Hadamard
+    product chain (query execution: "a handful of small matmuls" fused
+    into ONE kernel launch).
+
+Each package: ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py`` (jit
+wrapper with padding, power-of-two launch bucketing and CPU-interpret
+fallback), ``ref.py`` (pure-jnp oracle).
+"""

@@ -53,6 +53,15 @@ def batched_hist2d(bi, bj, weights, ki: int, kj: int, *,
     kernel with K dims padded to 128 lanes and N padded to the row tile.
     Padding is value-safe: padded rows carry weight 0 and padded K
     rows/columns are sliced away. Traceable under jit (static shapes).
+
+    Power-of-two bucketing contract: the batch dimension P is fixed by the
+    caller's chunking — ``BuildParams.pair_chunk`` rounds DOWN to a power
+    of two (the chunk is a ``pair_chunk * k2^2 * s2_max`` memory *ceiling*,
+    so bucketing must never exceed it), and the final partial chunk of a
+    build buckets its launch size likewise, so jit recompiles stay bounded
+    at ``log2(pair_chunk)`` variants per K shape. Compare
+    ``weightings.ops.q_bucket``, the serving-side analogue, which buckets
+    UP (padding there is cheaper than a lost fusion opportunity).
     """
     bi = jnp.asarray(bi, jnp.int32)
     bj = jnp.asarray(bj, jnp.int32)

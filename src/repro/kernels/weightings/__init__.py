@@ -1,2 +1,6 @@
+"""Fused weightings kernels (query hot spot): single-query and
+query-batched variants, each with a Pallas kernel and a jnp oracle. See
+``ops.py`` for the padding and the ``q_bucket`` power-of-two bucketing
+contract shared with the serving batch scheduler."""
 from repro.kernels.weightings.ops import (batched_weightings,  # noqa: F401
-                                          fused_weightings)
+                                          fused_weightings, q_bucket)

@@ -15,6 +15,24 @@ def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
+def q_bucket(q: int) -> int:
+    """Power-of-two bucketing contract for the query-batch dimension.
+
+    Serving waves produce arbitrary (ragged) group sizes — any mix of plain
+    queries and GROUP BY leaf fan-outs — and a jit recompile per distinct Q
+    would dwarf the dispatch being amortized. Launch sizes therefore bucket
+    UP to the next power of two, with a floor of 8 (below which padding is
+    cheaper than another compiled variant): at most ``log2(max_group) - 2``
+    compiled variants ever exist per (L, K1, K2) shape. Padded query rows
+    are value-safe garbage and are sliced away by the caller.
+
+    The construction-side analogue is ``BuildParams.pair_chunk`` for
+    ``kernels.hist2d.batched_hist2d``, which buckets DOWN (see there: the
+    chunk bound is a memory ceiling, not a floor).
+    """
+    return max(8, 1 << (int(q) - 1).bit_length())
+
+
 _ref_jit = jax.jit(fused_weightings_ref)
 _batched_ref_jit = jax.jit(batched_weightings_ref)
 
@@ -54,10 +72,11 @@ def batched_weightings(h_stack, beta, fold, hx, *, use_pallas: bool = True,
     """Query-batched fused weightings: beta (Q, L, K2) -> (Q, K1).
 
     See ref.batched_weightings_ref for semantics. Q is bucketed to a power
-    of two (min 8): serving waves produce arbitrary group sizes, and a jit
-    recompile per size would dwarf the launch being amortized; K1/K2 pad to
-    128-lane multiples. Padding is value-safe: padded beta rows produce
-    garbage rows that are sliced away; padded K entries are zero.
+    of two (``q_bucket``: UP to the next pow-2, min 8) so ragged serving
+    group sizes — plain queries and GROUP BY leaf fan-outs alike — reuse a
+    bounded set of compiled launch variants; K1/K2 pad to 128-lane
+    multiples. Padding is value-safe: padded beta rows produce garbage rows
+    that are sliced away; padded K entries are zero.
 
     ``beta`` is per-wave host data and is padded in NumPy (one device
     transfer, no dispatched pad ops on the hot path); the shared
@@ -67,7 +86,7 @@ def batched_weightings(h_stack, beta, fold, hx, *, use_pallas: bool = True,
     beta = np.asarray(beta, np.float32)
     q, el, k2 = beta.shape
     k1 = fold.shape[1]
-    qp = max(8, 1 << (q - 1).bit_length())
+    qp = q_bucket(q)
     k2p = _round_up(k2, 128)
     k1p = _round_up(k1, 128)
     if use_pallas and interpret is None:

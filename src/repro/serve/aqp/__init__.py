@@ -1,8 +1,17 @@
-# Multi-table AQP serving subsystem: catalog + batch scheduler + caches +
-# telemetry. Turns the single-table AQPFramework into a multi-tenant query
-# server whose hot path is one fused kernel launch per plan-shape group.
+"""Multi-table AQP serving subsystem: catalog + streaming admission +
+batch scheduler + caches + telemetry.
+
+Turns the single-table ``AQPFramework`` into a multi-tenant query server:
+``AQPServer.submit`` enqueues without blocking and returns a
+``QueryFuture``; a ``StreamingAdmission`` worker drains the queue into
+plan-shape waves whose hot path is one fused kernel launch per group
+(GROUP BY queries included, via planning-time leaf expansion). See
+``docs/serving.md`` for the full reference.
+"""
 from repro.serve.aqp.cache import LRUCache, normalize_sql  # noqa: F401
 from repro.serve.aqp.catalog import TableCatalog  # noqa: F401
-from repro.serve.aqp.metrics import Metrics, TableMetrics  # noqa: F401
-from repro.serve.aqp.scheduler import BatchScheduler  # noqa: F401
-from repro.serve.aqp.server import AQPServer  # noqa: F401
+from repro.serve.aqp.metrics import (AdmissionMetrics, Metrics,  # noqa: F401
+                                     TableMetrics)
+from repro.serve.aqp.scheduler import (BatchScheduler,  # noqa: F401
+                                       StreamingAdmission)
+from repro.serve.aqp.server import AQPServer, QueryFuture  # noqa: F401

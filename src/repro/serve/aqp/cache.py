@@ -35,6 +35,8 @@ def normalize_sql(text: str) -> str:
 
 @dataclasses.dataclass
 class CacheEntry:
+    """One cached value tagged with its owning table + staleness epoch."""
+
     table: str
     epoch: int
     value: object
@@ -72,11 +74,13 @@ class LRUCache:
         return None
 
     def miss(self, table: str | None = None):
+        """Record a miss (``table=None`` when the key's table is unknown)."""
         self.misses += 1
         if table is not None:
             self.table_misses[table] += 1
 
     def put(self, key: str, table: str, epoch: int, value):
+        """Insert/refresh ``key`` (evicts LRU entries beyond capacity)."""
         if self.capacity <= 0:
             return
         self._data[key] = CacheEntry(table, epoch, value)
@@ -91,14 +95,17 @@ class LRUCache:
             del self._data[k]
 
     def clear(self):
+        """Drop every entry (counters are preserved)."""
         self._data.clear()
 
     @property
     def hit_rate(self) -> float:
+        """Lifetime hits / (hits + misses); 0.0 before any lookup."""
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
     def stats(self) -> dict:
+        """Size/capacity/hit counters for telemetry snapshots."""
         return {"size": len(self._data), "capacity": self.capacity,
                 "hits": self.hits, "misses": self.misses,
                 "hit_rate": self.hit_rate}

@@ -37,6 +37,7 @@ class TableCatalog:
         return self.register(name, fw)
 
     def unregister(self, name: str):
+        """Drop ``name`` from the registry (no-op if absent)."""
         self._tables.pop(name, None)
 
     # -------------------------------------------------------------- resolution
@@ -48,9 +49,11 @@ class TableCatalog:
         return len(self._tables)
 
     def tables(self) -> list[str]:
+        """Sorted registered table names."""
         return sorted(self._tables)
 
     def resolve(self, name: str) -> AQPFramework:
+        """The framework registered under ``name``; PlanError if unknown."""
         try:
             return self._tables[name]
         except KeyError:

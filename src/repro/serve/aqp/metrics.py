@@ -1,8 +1,16 @@
-"""Per-table serving telemetry: latency percentiles, throughput, hit rates.
+"""Serving telemetry: latency/wait percentiles, throughput, admission stats.
 
-Latencies go into a bounded reservoir per table (uniform replacement after
-``reservoir`` samples) so long-running servers report stable p50/p99 without
-unbounded memory. Counters are exact.
+Three layers:
+
+  * ``TableMetrics`` — per-table query latencies (bounded reservoir with
+    uniform replacement, so long-running servers report stable p50/p99
+    without unbounded memory), batched/fallback/cache-hit counters, and
+    GROUP BY leaf-expansion counters. Counters are exact.
+  * ``AdmissionMetrics`` — server-wide streaming-admission stats: queue
+    depth at drain time, per-query admission wait (submit -> drain), and
+    drain causes (``full`` / ``flush`` / ``timeout``).
+  * ``Metrics`` — the container ``AQPServer`` owns; assembles the snapshot
+    dict (see ``docs/serving.md`` for the field reference).
 """
 from __future__ import annotations
 
@@ -12,19 +20,56 @@ import time
 import numpy as np
 
 
+class _Reservoir:
+    """Bounded uniform-replacement sample of a float stream."""
+
+    def __init__(self, capacity: int, seed: int = 0):
+        self.capacity = int(capacity)
+        self._rng = random.Random(seed)
+        self._data: list[float] = []
+        self.n_seen = 0
+
+    def add(self, value: float):
+        self.n_seen += 1
+        if len(self._data) < self.capacity:
+            self._data.append(value)
+        else:
+            idx = self._rng.randrange(self.n_seen)
+            if idx < self.capacity:
+                self._data[idx] = value
+
+    def percentiles_ms(self, qs=(50, 99)) -> list:
+        """Requested percentiles in milliseconds, or Nones when empty."""
+        if not self._data:
+            return [None] * len(qs)
+        arr = np.asarray(self._data, float)
+        return [float(np.percentile(arr, q) * 1e3) for q in qs]
+
+
 class TableMetrics:
+    """Per-table serving counters + latency reservoir.
+
+    ``record``/``record_result_hit`` mirror the server's execution paths;
+    ``record_group_expansion`` tracks GROUP BY queries whose per-category
+    leaves went through the batched path (executed vs served from the
+    per-leaf result cache).
+    """
+
     def __init__(self, reservoir: int = 4096, seed: int = 0):
         self.reservoir = int(reservoir)
-        self._rng = random.Random(seed)
-        self._lat: list[float] = []
+        self._lat = _Reservoir(self.reservoir, seed)
         self.n_queries = 0          # executed (cache misses)
         self.n_batched = 0          # executed via the fused batched kernel
         self.n_fallback = 0         # executed via the per-query path
         self.n_result_hits = 0      # served straight from the result cache
+        self.n_group_queries = 0    # GROUP BY queries answered
+        self.n_leaves_executed = 0  # GROUP BY leaves actually executed
+        self.n_leaf_cache_hits = 0  # GROUP BY leaves served from cache
         self._t_first = None
         self._t_last = None
 
     def record(self, latency_s: float, batched: bool):
+        """One executed query: its latency share and whether it fused."""
         now = time.perf_counter()
         self._t_first = self._t_first if self._t_first is not None else now
         self._t_last = now
@@ -33,21 +78,24 @@ class TableMetrics:
             self.n_batched += 1
         else:
             self.n_fallback += 1
-        if len(self._lat) < self.reservoir:
-            self._lat.append(latency_s)
-        else:
-            idx = self._rng.randrange(self.n_queries)
-            if idx < self.reservoir:
-                self._lat[idx] = latency_s
+        self._lat.add(latency_s)
 
     def record_result_hit(self):
+        """One query served from the result cache (no execution)."""
         self.n_result_hits += 1
 
+    def record_group_expansion(self, n_executed: int, n_cached: int):
+        """One GROUP BY query: leaves executed vs served from cache."""
+        self.n_group_queries += 1
+        self.n_leaves_executed += int(n_executed)
+        self.n_leaf_cache_hits += int(n_cached)
+
     def snapshot(self) -> dict:
-        lat = np.asarray(self._lat, float)
+        """Point-in-time dict of counters + p50/p99/qps (None when empty)."""
         served = self.n_queries + self.n_result_hits
         span = ((self._t_last - self._t_first)
                 if self._t_first is not None else 0.0)
+        p50, p99 = self._lat.percentiles_ms()
         return {
             "queries_served": served,
             "queries_executed": self.n_queries,
@@ -56,26 +104,76 @@ class TableMetrics:
             "result_cache_hits": self.n_result_hits,
             "batched_fraction": (self.n_batched / self.n_queries
                                  if self.n_queries else 0.0),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else None,
-            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else None,
+            "p50_ms": p50,
+            "p99_ms": p99,
             "qps": (self.n_queries / span if span > 0 else None),
+            "group_by": {
+                "queries": self.n_group_queries,
+                "leaves_executed": self.n_leaves_executed,
+                "leaf_cache_hits": self.n_leaf_cache_hits,
+            },
+        }
+
+
+class AdmissionMetrics:
+    """Streaming-admission telemetry: queue depth, waits, drain causes."""
+
+    def __init__(self, reservoir: int = 4096):
+        self._wait = _Reservoir(reservoir, seed=1)
+        self.n_drains = 0
+        self.n_submitted = 0
+        self.max_depth = 0
+        self._depth_sum = 0
+        self.causes = {"full": 0, "flush": 0, "timeout": 0}
+
+    def record_submit(self):
+        """One ``AQPServer.submit`` call (cache hits and dupes included)."""
+        self.n_submitted += 1
+
+    def record_drain(self, stats):
+        """One admission-loop drain (a ``scheduler.DrainStats``)."""
+        self.n_drains += 1
+        self.max_depth = max(self.max_depth, stats.depth)
+        self._depth_sum += stats.depth
+        self.causes[stats.cause] = self.causes.get(stats.cause, 0) + 1
+
+    def record_wait(self, wait_s: float):
+        """One submission's admission wait (submit -> drained into a wave)."""
+        self._wait.add(wait_s)
+
+    def snapshot(self) -> dict:
+        """Point-in-time admission stats (see ``docs/serving.md``)."""
+        p50, p99 = self._wait.percentiles_ms()
+        return {
+            "submitted": self.n_submitted,
+            "drains": self.n_drains,
+            "drain_causes": dict(self.causes),
+            "max_queue_depth": self.max_depth,
+            "mean_queue_depth": (self._depth_sum / self.n_drains
+                                 if self.n_drains else 0.0),
+            "wait_p50_ms": p50,
+            "wait_p99_ms": p99,
         }
 
 
 class Metrics:
-    """Per-table TableMetrics plus server-wide aggregation."""
+    """Per-table ``TableMetrics`` + admission stats + server-wide totals."""
 
     def __init__(self, reservoir: int = 4096):
         self.reservoir = reservoir
         self._tables: dict[str, TableMetrics] = {}
+        self.admission = AdmissionMetrics(reservoir)
 
     def table(self, name: str) -> TableMetrics:
+        """The (lazily created) ``TableMetrics`` for ``name``."""
         tm = self._tables.get(name)
         if tm is None:
             tm = self._tables[name] = TableMetrics(self.reservoir)
         return tm
 
     def snapshot(self, plan_cache=None, result_cache=None) -> dict:
+        """Full telemetry snapshot: ``{"tables", "totals"}`` (see
+        ``docs/serving.md`` for every field)."""
         out = {name: tm.snapshot() for name, tm in sorted(self._tables.items())}
         totals = {
             "queries_served": sum(t["queries_served"] for t in out.values()),
@@ -83,6 +181,7 @@ class Metrics:
             "batched_fraction": (
                 sum(t["batched"] for t in out.values())
                 / max(sum(t["queries_executed"] for t in out.values()), 1)),
+            "admission": self.admission.snapshot(),
         }
         if plan_cache is not None:
             totals["plan_cache"] = plan_cache.stats()

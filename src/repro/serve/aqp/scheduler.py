@@ -1,8 +1,8 @@
-"""Batch scheduler: group in-flight queries by plan shape, fuse launches.
+"""Batch scheduler + streaming admission for the AQP serving layer.
 
 At sub-ms per-query latency the serving bottleneck is dispatch, not math
 (the same observation that motivates ``core/fastpath``'s per-predicate
-fusion, one level up). The scheduler takes a set of in-flight planned
+fusion, one level up). ``BatchScheduler`` takes a set of in-flight planned
 queries and groups them by **plan shape** ``(table, exec column,
 pair-predicate column set)``; each group shares its padded (H, fold, hx)
 stacks and executes as ONE query-batched kernel launch covering every query
@@ -10,9 +10,17 @@ and all three bound variants (``FastPath.batch`` ->
 ``kernels.weightings.batched_weightings``). Per-query work shrinks to beta
 assembly + the final scalar aggregation.
 
-Queries outside the batchable shape (OR trees, GROUP BY, no WHERE) fall
-back to the per-table engine's own path — which is also the oracle the
-batched path is tested against.
+``StreamingAdmission`` feeds it continuously: submissions enqueue without
+blocking and a worker thread drains the queue into waves under a
+``max_wait_ms`` / ``max_batch`` policy, so the batched launches fill up
+from *traffic*, not from whoever happened to call ``query_batch`` with a
+big list. GROUP BY queries arrive from the server already expanded into
+per-category leaf plans (``QueryPlan.leaf_plans``) — every leaf of every
+in-flight GROUP BY shares one plan shape and rides the same fused launch.
+
+Queries outside the batchable shape (OR trees, no WHERE) fall back to the
+per-table engine's own path — which is also the oracle the batched path is
+tested against.
 
 Execution modes:
   * ``"pallas"`` — batched Pallas kernel (TPU; interpret elsewhere)
@@ -28,7 +36,9 @@ Execution modes:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
 
 from repro.core.fastpath import FastPath
@@ -37,12 +47,163 @@ from repro.core.query import QueryPlan, QueryResult
 
 @dataclasses.dataclass
 class ScheduledResult:
+    """Outcome of one scheduled (planned) query.
+
+    Attributes:
+        result: the ``QueryResult`` (estimate/bounds or groups dict).
+        batched: True iff this query executed inside a fused batched launch.
+        latency_s: per-query wall share (group wall time / group size).
+    """
+
     result: QueryResult
     batched: bool           # executed via the fused batched launch
     latency_s: float        # per-query wall share (group wall / group size)
 
 
+@dataclasses.dataclass
+class DrainStats:
+    """One admission-loop drain: why it fired and what it took.
+
+    Attributes:
+        cause: ``"full"`` (queue reached ``max_batch``), ``"flush"``
+            (explicit flush / synchronous wrapper), or ``"timeout"``
+            (``max_wait_ms`` elapsed with a partial group).
+        size: number of submissions drained into this wave.
+        depth: queue depth observed at drain time (``size`` plus whatever
+            stayed behind because of ``max_batch``).
+        waited_s: age of the oldest drained submission (enqueue -> drain).
+    """
+
+    cause: str
+    size: int
+    depth: int
+    waited_s: float
+
+
+class StreamingAdmission:
+    """Continuous admission: a queue drained into waves by a worker thread.
+
+    ``submit`` enqueues and returns immediately — the online-aggregation
+    serving model, replacing the synchronous wave-per-call scheduler. A
+    single daemon worker drains the queue into execution waves under a
+    latency/batch-size policy:
+
+      * a wave fires as soon as ``max_batch`` submissions are queued, or
+      * when the oldest queued submission has waited ``max_wait_ms``, or
+      * immediately on ``flush()`` (used by the synchronous ``query_batch``
+        wrapper so a blocking caller never pays the admission wait).
+
+    The worker executes each wave via ``execute_cb(batch, stats)`` (supplied
+    by ``AQPServer``) and keeps draining, so completed waves resolve their
+    futures without blocking later arrivals. ``flush()`` on an empty queue
+    is a no-op (the flag is cleared while idle, never banked).
+
+    The worker thread starts lazily on first submit and is a daemon;
+    ``close()`` stops and joins it (pending submissions are drained first so
+    no future is abandoned).
+    """
+
+    def __init__(self, execute_cb, max_wait_ms: float = 2.0,
+                 max_batch: int = 64):
+        self.execute_cb = execute_cb
+        self.max_wait_ms = float(max_wait_ms)
+        self.max_batch = int(max_batch)
+        self._q: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        self._flush = False
+        self._stop = False
+        self._thread: threading.Thread | None = None
+
+    # ----------------------------------------------------------------- public
+
+    def submit(self, item, t_submit: float | None = None):
+        """Enqueue ``item`` (non-blocking) and wake the admission worker."""
+        t = time.perf_counter() if t_submit is None else t_submit
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("admission queue is closed")
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._loop, name="aqp-admission", daemon=True)
+                self._thread.start()
+            self._q.append((t, item))
+            self._cv.notify_all()
+
+    def flush(self):
+        """Drain the current queue immediately (no-op when empty)."""
+        with self._cv:
+            if self._q:
+                self._flush = True
+                self._cv.notify_all()
+
+    def depth(self) -> int:
+        """Current queue depth (submitted, not yet drained into a wave)."""
+        with self._cv:
+            return len(self._q)
+
+    def close(self):
+        """Stop the worker after draining anything still queued."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+            thread = self._thread
+        if thread is not None:
+            thread.join()
+            self._thread = None
+
+    # ----------------------------------------------------------------- worker
+
+    def _collect(self):
+        """Block until a wave is due; returns (batch, DrainStats) or None."""
+        with self._cv:
+            while not self._q:
+                self._flush = False         # flush on empty queue: no-op
+                if self._stop:
+                    return None
+                self._cv.wait()
+            # Admission policy: the wave fires on whichever of max_batch /
+            # flush / oldest-waited-max_wait_ms trips first.
+            deadline = self._q[0][0] + self.max_wait_ms / 1e3
+            cause = "timeout"
+            while True:
+                if len(self._q) >= self.max_batch:
+                    cause = "full"
+                    break
+                if self._flush or self._stop:
+                    cause = "flush"
+                    break
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                self._cv.wait(remaining)
+            self._flush = False
+            depth = len(self._q)
+            take = min(depth, self.max_batch)
+            now = time.perf_counter()
+            waited = now - self._q[0][0]
+            batch = [self._q.popleft()[1] for _ in range(take)]
+            return batch, DrainStats(cause, take, depth, waited)
+
+    def _loop(self):
+        while True:
+            wave = self._collect()
+            if wave is None:
+                return
+            self.execute_cb(*wave)
+
+
 class BatchScheduler:
+    """Groups planned queries by plan shape and fuses kernel launches.
+
+    Args:
+        catalog: ``TableCatalog`` resolving table names to engines.
+        mode: ``"pallas"`` / ``"ref"`` / ``"numpy"`` / ``None`` (auto) —
+            see the module docstring for the semantics of each.
+        max_group: hard cap on queries per fused launch (group splits).
+        min_group: groups smaller than this skip the fused launch (a batch
+            of one gains nothing from the kernel but still pays dispatch).
+    """
+
     def __init__(self, catalog, mode: str | None = None,
                  max_group: int = 256, min_group: int = 2):
         if mode is None:

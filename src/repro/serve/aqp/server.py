@@ -1,46 +1,123 @@
-"""AQPServer: multi-table AQP serving front-end.
+"""AQPServer: multi-table AQP serving front-end with streaming admission.
 
-Pipeline per wave of SQL strings (``query_batch``):
+Pipeline per submitted SQL string (``submit`` -> ``QueryFuture``):
 
-    normalize -> plan cache -> result cache -> dedupe -> BatchScheduler
-       |            |              |                        |
-       |       (epoch-keyed   (epoch-keyed             one fused launch
-       |        QueryPlans)    QueryResults)           per plan shape
-       v
+    normalize -> plan cache -> result cache -> in-flight dedupe -> enqueue
+       |            |              |                                  |
+       |       (epoch-keyed   (epoch-keyed;                   StreamingAdmission
+       |        QueryPlans)    GROUP BY adds                  drains plan-shape
+       v                       per-leaf entries)              waves -> futures
     FROM <table> resolved via TableCatalog (PlanError if unknown)
 
+``submit`` enqueues immediately and returns a future; the admission worker
+drains the queue into execution waves under a ``max_wait_ms`` /
+``max_batch`` policy and resolves futures as waves complete, without
+blocking later arrivals. ``query_batch`` survives as a thin synchronous
+wrapper: submit everything, flush, wait.
+
+GROUP BY queries ride the batched fast path: plans arrive from
+``core/query.py`` already expanded into per-category leaf plans, the server
+executes every *uncached* leaf of every in-flight query through the
+scheduler's fused ``batched_weightings`` launches, and reassembles per-group
+results. Leaf results are cached under plan-canonical keys
+(``QueryPlan.canonical_key``), so overlapping GROUP BYs — textual variants,
+or re-issues after partial eviction — share entries.
+
 Staleness: every ``AQPFramework`` bumps its epoch on ingest/append_rows;
-cache entries are tagged with the epoch they were computed at, so appended
-rows can never be answered from a stale cache — a query against a stale
-(un-rebuilt) table raises ``RuntimeError`` exactly like the single-table
-``AQPFramework.query``.
+cache entries are tagged with the epoch captured at *planning* time, so a
+result computed before an ``append_rows`` that lands mid-flight is stored
+under the old epoch and can never be served after the bump — and a query
+against a stale (un-rebuilt) table fails with ``RuntimeError`` exactly like
+the single-table ``AQPFramework.query``.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import threading
+import time
 
 from repro.core import sql as sqlmod
-from repro.core.query import QueryResult
+from repro.core.query import QueryPlan, QueryResult, assemble_groups
 from repro.serve.aqp.cache import LRUCache, normalize_sql
 from repro.serve.aqp.catalog import TableCatalog
 from repro.serve.aqp.metrics import Metrics
-from repro.serve.aqp.scheduler import BatchScheduler
+from repro.serve.aqp.scheduler import BatchScheduler, StreamingAdmission
+
+
+class QueryFuture(concurrent.futures.Future):
+    """Handle for one submitted query; resolves to a ``QueryResult``.
+
+    Standard ``concurrent.futures.Future`` API (``result(timeout)``,
+    ``done()``, ``exception()``, ``add_done_callback``) plus the originating
+    ``sql`` text for bookkeeping.
+    """
+
+    def __init__(self, sql: str = ""):
+        super().__init__()
+        self.sql = sql
+
+
+@dataclasses.dataclass
+class _Submission:
+    """One enqueued (not yet executed) query and its attached futures."""
+
+    norm: str
+    table: str
+    plan: QueryPlan
+    epoch: int                       # table epoch captured at planning time
+    t_submit: float
+    futures: list                    # [QueryFuture]; index 0 is the primary
+    missing: list | None = None      # GROUP BY: leaf indices still to execute
+    cached_leaves: dict = dataclasses.field(default_factory=dict)
+
+
+def _leaf_key(plan: QueryPlan) -> str:
+    """Result-cache key for one GROUP BY leaf plan.
+
+    Plan-canonical (text-independent), prefixed so it can never collide
+    with a normalized-SQL whole-query key (SQL never starts with ``@``).
+    """
+    return "@leaf|" + plan.canonical_key()
 
 
 class AQPServer:
+    """Multi-table AQP serving front-end (catalog + admission + caches).
+
+    Args:
+        catalog: existing ``TableCatalog`` to serve from (default: new).
+        mode: scheduler execution mode — ``"pallas"`` / ``"ref"`` /
+            ``"numpy"`` / ``None`` (auto; see ``scheduler.BatchScheduler``).
+        plan_cache_size / result_cache_size: LRU capacities (entries).
+        max_group / min_group: fused-launch group bounds (scheduler knobs).
+        max_wait_ms: admission policy — how long the oldest queued
+            submission may wait before a partial wave fires.
+        max_batch: admission policy — wave fires early once this many
+            submissions are queued.
+    """
+
     def __init__(self, catalog: TableCatalog | None = None,
                  mode: str | None = None,
                  plan_cache_size: int = 4096,
                  result_cache_size: int = 16384,
-                 max_group: int = 256, min_group: int = 2):
+                 max_group: int = 256, min_group: int = 2,
+                 max_wait_ms: float = 2.0, max_batch: int = 64):
         self.catalog = catalog or TableCatalog()
         self.scheduler = BatchScheduler(self.catalog, mode=mode,
                                         max_group=max_group,
                                         min_group=min_group)
+        self.admission = StreamingAdmission(self._execute_wave,
+                                            max_wait_ms=max_wait_ms,
+                                            max_batch=max_batch)
         self.plan_cache = LRUCache(plan_cache_size)
         self.result_cache = LRUCache(result_cache_size)
         self.metrics = Metrics()
         self._wiring: dict[str, tuple] = {}   # name -> (framework, callback)
+        # One lock guards caches, metrics and the in-flight dedupe map;
+        # taken by the submitting thread, the admission worker, and
+        # framework invalidation callbacks.
+        self._lock = threading.RLock()
+        self._inflight: dict[str, _Submission] = {}
 
     # ------------------------------------------------------------ registration
 
@@ -53,6 +130,8 @@ class AQPServer:
         return self
 
     def register_table(self, name: str, table: dict, **kwargs) -> "AQPServer":
+        """Convenience: build + ingest a framework from a raw column dict
+        (kwargs forward to ``TableCatalog.register_table``) and register it."""
         fw = self.catalog.register_table(name, table, **kwargs)
         self._wire(name, fw)
         return self
@@ -76,76 +155,260 @@ class AQPServer:
         self._purge(name)
 
     def close(self):
-        """Detach every framework callback so a discarded server is not
-        kept alive (and purged into) by long-lived frameworks."""
+        """Shut down: drain+stop the admission worker, then detach every
+        framework callback so a discarded server is not kept alive (and
+        purged into) by long-lived frameworks."""
+        self.admission.close()
         for name, (fw, cb) in list(self._wiring.items()):
             fw.off_invalidate(cb)
         self._wiring.clear()
 
     def _purge(self, name: str):
-        self.plan_cache.purge_table(name)
-        self.result_cache.purge_table(name)
+        with self._lock:
+            self.plan_cache.purge_table(name)
+            self.result_cache.purge_table(name)
 
     # ----------------------------------------------------------------- queries
 
+    def submit(self, sql_text: str) -> QueryFuture:
+        """Enqueue one query; returns immediately with a ``QueryFuture``.
+
+        Planning (cached), result-cache lookup and in-flight deduplication
+        happen inline on the calling thread — a cache hit resolves the
+        future before ``submit`` returns, and planning errors (unknown
+        table/column, stale synopsis) are set ON the future rather than
+        raised, so streaming callers handle every outcome in one place.
+        Uncached queries enter the admission queue and resolve when their
+        wave completes.
+        """
+        fut = QueryFuture(sql_text)
+        t_submit = time.perf_counter()
+        norm = normalize_sql(sql_text)
+        with self._lock:
+            self.metrics.admission.record_submit()
+            inflight = self._inflight.get(norm)
+            if inflight is not None:          # identical query already queued
+                inflight.futures.append(fut)
+                return fut
+            try:
+                table, plan, epoch = self._plan_for(norm)
+            except Exception as exc:          # PlanError / stale RuntimeError
+                fut.set_exception(exc)
+                return fut
+            rentry = self.result_cache.get(norm, self.catalog.epoch)
+            if rentry is not None:
+                self.metrics.table(table).record_result_hit()
+                fut.set_result(dataclasses.replace(rentry.value,
+                                                   latency_s=0.0))
+                return fut
+            self.result_cache.miss(table)
+            sub = _Submission(norm, table, plan, epoch, t_submit, [fut])
+            if plan.leaf_plans:
+                self._lookup_leaves(sub)
+                if not sub.missing:           # every leaf served from cache
+                    self._resolve_cached_group(sub)
+                    return fut
+            self._inflight[norm] = sub
+        try:
+            self.admission.submit(sub, t_submit)
+        except Exception as exc:              # closed server: fail, don't leak
+            with self._lock:
+                self._inflight.pop(norm, None)
+                futures = list(sub.futures)
+            for f in futures:
+                f.set_exception(exc)
+        return fut
+
+    def flush(self):
+        """Ask the admission worker to drain the queue now (no-op if empty)."""
+        self.admission.flush()
+
     def query(self, sql_text: str) -> QueryResult:
+        """Synchronous single query (submit + flush + wait)."""
         return self.query_batch([sql_text])[0]
 
     def query_batch(self, sqls: list[str]) -> list[QueryResult]:
-        """Answer a wave of queries; results align with ``sqls``.
+        """Synchronous wave: results align with ``sqls``.
 
-        Raises PlanError for unknown tables/columns and RuntimeError for
-        stale tables (the whole wave aborts — the serving contract matches
-        ``AQPFramework.query``).
+        Thin wrapper over the streaming path: submits everything, flushes
+        the admission queue (so a blocking caller never pays ``max_wait_ms``)
+        and waits. Raises PlanError for unknown tables/columns and
+        RuntimeError for stale tables — the serving contract matches
+        ``AQPFramework.query``.
         """
-        results: list[QueryResult | None] = [None] * len(sqls)
-        pending: dict[str, list[int]] = {}       # norm -> indices to fill
-        pending_items: dict[str, tuple] = {}     # norm -> (table, plan)
-        epoch_of = self.catalog.epoch
+        futures = [self.submit(sql) for sql in sqls]
+        self.flush()
+        return [fut.result() for fut in futures]
 
-        for i, sql in enumerate(sqls):
-            norm = normalize_sql(sql)
-            if norm in pending:                  # duplicate within the wave
-                pending[norm].append(i)
-                continue
-            table, plan = self._plan_for(norm)
-            rentry = self.result_cache.get(norm, epoch_of)
-            if rentry is not None:
-                results[i] = dataclasses.replace(rentry.value, latency_s=0.0)
-                self.metrics.table(table).record_result_hit()
-                continue
-            self.result_cache.miss(table)
-            pending[norm] = [i]
-            pending_items[norm] = (table, plan)
-
-        if pending:
-            norms = list(pending)
-            scheduled = self.scheduler.execute(
-                [pending_items[n] for n in norms])
-            for norm, sr in zip(norms, scheduled):
-                table, _plan = pending_items[norm]
-                self.result_cache.put(norm, table, epoch_of(table), sr.result)
-                self.metrics.table(table).record(sr.latency_s, sr.batched)
-                idxs = pending[norm]
-                results[idxs[0]] = sr.result
-                for j in idxs[1:]:   # in-wave duplicates: served, not executed
-                    results[j] = dataclasses.replace(sr.result, latency_s=0.0)
-                    self.metrics.table(table).record_result_hit()
-        return results  # type: ignore[return-value]
+    # ------------------------------------------------------ submit-side helpers
 
     def _plan_for(self, norm: str):
+        """Plan (via cache) -> (table, plan, epoch the plan is valid at).
+
+        The epoch is captured BEFORE the engine fetch, so if a rebuild
+        races the planning the plan is tagged with the older epoch and can
+        only ever validate — in the caches and at wave execution — against
+        the synopsis it was actually planned for.
+        """
         entry = self.plan_cache.get(norm, self.catalog.epoch)
         if entry is not None:
-            return entry.table, entry.value
+            return entry.table, entry.value, entry.epoch
         parsed = sqlmod.parse_sql(norm)
         table = parsed.table
         self.plan_cache.miss(table if table in self.catalog else None)
+        epoch = self.catalog.epoch(table)
         engine = self.catalog.engine(table)   # PlanError / RuntimeError here
         plan = engine.plan_query(parsed)
-        self.plan_cache.put(norm, table, self.catalog.epoch(table), plan)
-        return table, plan
+        self.plan_cache.put(norm, table, epoch, plan)
+        return table, plan, epoch
+
+    def _lookup_leaves(self, sub: _Submission):
+        """Fill ``sub.cached_leaves`` / ``sub.missing`` from the result cache
+        (one recorded miss per missing leaf, matching the per-leaf hits)."""
+        sub.missing = []
+        sub.cached_leaves = {}
+        for i, leaf in enumerate(sub.plan.leaf_plans):
+            entry = self.result_cache.get(_leaf_key(leaf), self.catalog.epoch)
+            if entry is not None:
+                sub.cached_leaves[i] = entry.value
+            else:
+                self.result_cache.miss(sub.table)
+                sub.missing.append(i)
+
+    def _replan(self, sub: _Submission):
+        """The table changed while ``sub`` sat in the admission queue: its
+        plan may encode literals against a synopsis that no longer exists.
+        Re-plan against the current synopsis (plan cache was purged by the
+        epoch bump) and refresh the per-leaf cache lookups; raises the
+        usual PlanError/RuntimeError if the table is gone or stale."""
+        sub.table, sub.plan, sub.epoch = self._plan_for(sub.norm)
+        sub.missing = None
+        if sub.plan.leaf_plans:
+            self._lookup_leaves(sub)
+
+    def _resolve_cached_group(self, sub: _Submission):
+        """GROUP BY answered entirely from per-leaf cache entries."""
+        result = assemble_groups(sub.plan, sub.cached_leaves)
+        tm = self.metrics.table(sub.table)
+        tm.record_result_hit()
+        tm.record_group_expansion(0, len(sub.cached_leaves))
+        self.result_cache.put(sub.norm, sub.table, sub.epoch, result)
+        for fut in sub.futures:
+            fut.set_result(dataclasses.replace(result, latency_s=0.0))
+
+    # ------------------------------------------------------- admission worker
+
+    def _execute_wave(self, batch: list, drain):
+        """Execute one drained wave (admission-worker thread).
+
+        Submissions whose table epoch moved while they sat in the queue
+        (append_rows/rebuild landed mid-flight) are re-planned first — a
+        plan encodes literals against one specific synopsis, so executing
+        it against a rebuilt one would be silently wrong; if the table is
+        stale (no rebuild yet) the re-plan raises and the futures resolve
+        with that error. Then expands GROUP BY submissions into their
+        uncached leaf plans, runs ALL work units (plain queries + leaves of
+        every in-flight GROUP BY) through one ``BatchScheduler.execute``
+        call — plan-shape grouping inside the scheduler fuses everything
+        fusable — then reassembles, caches and resolves. A scheduler error
+        isolates to per-item retry so one poisoned query cannot reject an
+        entire wave's futures.
+        """
+        now = time.perf_counter()
+        prefailed: dict[int, Exception] = {}
+        with self._lock:
+            self.metrics.admission.record_drain(drain)
+            for sub in batch:
+                self.metrics.admission.record_wait(now - sub.t_submit)
+                if sub.epoch != self.catalog.epoch(sub.table):
+                    try:
+                        self._replan(sub)
+                    except Exception as exc:
+                        prefailed[id(sub)] = exc
+
+        items, slots = [], []          # slots: (submission, leaf_idx | None)
+        for sub in batch:
+            if id(sub) in prefailed:
+                continue
+            if sub.plan.leaf_plans:
+                for i in sub.missing:
+                    items.append((sub.table, sub.plan.leaf_plans[i]))
+                    slots.append((sub, i))
+            else:
+                items.append((sub.table, sub.plan))
+                slots.append((sub, None))
+
+        errors: dict[int, Exception] = {}
+        try:
+            scheduled = self.scheduler.execute(items)
+        except Exception:
+            scheduled = [None] * len(items)
+            for k, item in enumerate(items):
+                try:
+                    scheduled[k] = self.scheduler.execute([item])[0]
+                except Exception as exc:       # isolate the poisoned item
+                    errors[k] = exc
+
+        leaf_out: dict[int, dict] = {}         # id(sub) -> {leaf_idx: sr}
+        failed = dict(prefailed)               # id(sub) -> first error
+        direct: dict[int, object] = {}         # id(sub) -> ScheduledResult
+        for k, (sub, leaf_idx) in enumerate(slots):
+            if k in errors:
+                failed.setdefault(id(sub), errors[k])
+            elif leaf_idx is None:
+                direct[id(sub)] = scheduled[k]
+            else:
+                leaf_out.setdefault(id(sub), {})[leaf_idx] = scheduled[k]
+
+        with self._lock:
+            for sub in batch:
+                self._inflight.pop(sub.norm, None)
+                err = failed.get(id(sub))
+                if err is not None:
+                    for fut in sub.futures:
+                        fut.set_exception(err)
+                elif sub.plan.leaf_plans:
+                    self._finish_group(sub, leaf_out.get(id(sub), {}))
+                else:
+                    self._finish_single(sub, direct[id(sub)])
+
+    def _finish_single(self, sub: _Submission, sr):
+        self.result_cache.put(sub.norm, sub.table, sub.epoch, sr.result)
+        self.metrics.table(sub.table).record(sr.latency_s, sr.batched)
+        self._resolve(sub, sr.result)
+
+    def _finish_group(self, sub: _Submission, executed: dict):
+        """Cache executed leaves, merge with cached ones, assemble, resolve."""
+        leaf_results = dict(sub.cached_leaves)
+        latency = 0.0
+        batched = False
+        for i, sr in executed.items():
+            self.result_cache.put(_leaf_key(sub.plan.leaf_plans[i]),
+                                  sub.table, sub.epoch, sr.result)
+            leaf_results[i] = sr.result
+            latency += sr.latency_s
+            batched = batched or sr.batched
+        result = assemble_groups(sub.plan, leaf_results)
+        result.latency_s = latency
+        self.result_cache.put(sub.norm, sub.table, sub.epoch, result)
+        tm = self.metrics.table(sub.table)
+        tm.record(latency, batched)
+        tm.record_group_expansion(len(executed), len(sub.cached_leaves))
+        self._resolve(sub, result)
+
+    def _resolve(self, sub: _Submission, result: QueryResult):
+        """Primary future gets the real latency; in-flight duplicates are
+        served (not executed) and count as result-cache hits."""
+        sub.futures[0].set_result(result)
+        for fut in sub.futures[1:]:
+            self.metrics.table(sub.table).record_result_hit()
+            fut.set_result(dataclasses.replace(result, latency_s=0.0))
 
     # ------------------------------------------------------------------- stats
 
     def stats(self) -> dict:
-        return self.metrics.snapshot(self.plan_cache, self.result_cache)
+        """Telemetry snapshot (tables + totals; see ``docs/serving.md``)."""
+        with self._lock:
+            snap = self.metrics.snapshot(self.plan_cache, self.result_cache)
+        snap["totals"]["admission"]["queue_depth"] = self.admission.depth()
+        return snap

@@ -1,0 +1,22 @@
+"""Documentation stays linted under the plain tier-1 pytest command:
+scripts/check_docs.sh fails on broken intra-repo links, missing docstrings
+on public serve/aqp surfaces, and knobs documented zero or multiple times."""
+import pathlib
+import subprocess
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_check_docs_passes():
+    proc = subprocess.run(
+        ["bash", str(REPO / "scripts" / "check_docs.sh")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, f"\n{proc.stdout}\n{proc.stderr}"
+    assert "check_docs: OK" in proc.stdout
+
+
+def test_docs_tree_complete():
+    for name in ("architecture.md", "serving.md", "construction.md",
+                 "benchmarks.md"):
+        assert (REPO / "docs" / name).is_file(), f"docs/{name} missing"
+    assert (REPO / "README.md").is_file()

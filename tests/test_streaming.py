@@ -1,0 +1,272 @@
+"""Streaming admission + GROUP BY batching: futures, admission policy edge
+cases (empty drain, timeout with a partial group, epoch bumps mid-flight),
+and GROUP BY leaf-path equivalence with the unbatched oracle."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.aqp.engine import AQPFramework
+from repro.core.types import BuildParams
+from repro.serve.aqp import AQPServer, StreamingAdmission
+
+TIMEOUT = 30  # generous future-resolution bound; loaded CI boxes are slow
+
+
+def _make_table(n=8_000, seed=7):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": rng.integers(0, 500, n).astype(float),
+        "b": np.abs(rng.normal(100, 30, n)).round(),
+        "cat": np.array(["r", "g", "b", "c", "m", "y"])[
+            rng.integers(0, 6, n)],
+    }
+
+
+@pytest.fixture(scope="module")
+def framework():
+    return AQPFramework(BuildParams(n_samples=4_000, seed=2),
+                        use_compression=False).ingest(_make_table())
+
+
+def _server(framework, **kwargs):
+    kwargs.setdefault("mode", "numpy")
+    return AQPServer(**kwargs).register("t", framework)
+
+
+# -------------------------------------------------------- admission mechanics
+
+
+def test_submit_returns_future_and_resolves(framework):
+    srv = _server(framework)
+    sql = "SELECT COUNT(a) FROM t WHERE b > 100"
+    fut = srv.submit(sql)
+    assert fut.sql == sql
+    srv.flush()
+    res = fut.result(timeout=TIMEOUT)
+    assert res.as_tuple() == framework.engine.query(sql).as_tuple()
+    srv.close()
+
+
+def test_empty_queue_drain_is_noop(framework):
+    """flush() with nothing queued must not hang, fire a wave, or poison
+    the worker — and must not bank a drain for the next arrivals."""
+    srv = _server(framework, max_wait_ms=200.0)
+    srv.flush()                               # worker not even started
+    fut = srv.submit("SELECT COUNT(a) FROM t WHERE b > 120")
+    srv.flush()
+    assert fut.result(timeout=TIMEOUT).estimate is not None
+    srv.flush()                               # empty again, after a wave
+    time.sleep(0.05)
+    snap = srv.stats()["totals"]["admission"]
+    assert snap["drains"] == 1 and snap["queue_depth"] == 0
+    srv.close()
+
+
+def test_streaming_admission_close_drains_pending():
+    """Pending submissions are executed, not abandoned, on close()."""
+    seen = []
+    adm = StreamingAdmission(lambda batch, stats: seen.append(
+        (len(batch), stats.cause)), max_wait_ms=10_000.0, max_batch=64)
+    adm.submit("x")
+    adm.submit("y")
+    adm.close()
+    assert seen == [(2, "flush")]
+    with pytest.raises(RuntimeError, match="closed"):
+        adm.submit("z")
+
+
+def test_max_wait_timeout_fires_partial_group(framework):
+    """A partial group (size < max_batch) executes once the oldest
+    submission has waited max_wait_ms — no flush, no full batch."""
+    srv = _server(framework, max_wait_ms=60.0, max_batch=64)
+    futs = [srv.submit(f"SELECT COUNT(a) FROM t WHERE b > {thr}")
+            for thr in (90, 110, 130)]
+    t0 = time.perf_counter()
+    for fut in futs:                          # resolve WITHOUT flush
+        assert fut.result(timeout=TIMEOUT).estimate is not None
+    waited = time.perf_counter() - t0
+    assert waited < TIMEOUT
+    adm = srv.stats()["totals"]["admission"]
+    assert adm["drain_causes"]["timeout"] >= 1
+    assert adm["drain_causes"]["full"] == 0
+    assert 3 <= adm["max_queue_depth"] <= 3
+    assert adm["wait_p99_ms"] >= 20.0         # the group actually waited
+    srv.close()
+
+
+def test_full_batch_fires_without_waiting(framework):
+    srv = _server(framework, max_wait_ms=10_000.0, max_batch=4)
+    futs = [srv.submit(f"SELECT COUNT(a) FROM t WHERE b > {thr}")
+            for thr in (60, 70, 80, 90)]
+    for fut in futs:                          # max_batch reached: no flush
+        assert fut.result(timeout=TIMEOUT).estimate is not None
+    assert srv.stats()["totals"]["admission"]["drain_causes"]["full"] >= 1
+    srv.close()
+
+
+def test_inflight_duplicates_execute_once(framework):
+    srv = _server(framework, max_wait_ms=10_000.0)
+    sql = "SELECT SUM(b) FROM t WHERE a > 250"
+    futs = [srv.submit(sql) for _ in range(4)]
+    srv.flush()
+    got = {fut.result(timeout=TIMEOUT).as_tuple() for fut in futs}
+    assert len(got) == 1
+    st = srv.stats()
+    assert st["totals"]["queries_executed"] == 1
+    assert st["tables"]["t"]["result_cache_hits"] == 3
+    srv.close()
+
+
+def test_streaming_does_not_block_later_arrivals(framework):
+    """A second wave completes while an earlier submission's results are
+    still being consumed — admission is continuous, not call-scoped."""
+    srv = _server(framework, max_wait_ms=5.0)
+    first = srv.submit("SELECT COUNT(a) FROM t WHERE b > 100")
+    done = threading.Event()
+    first.add_done_callback(lambda f: done.set())
+    assert done.wait(TIMEOUT)
+    second = srv.submit("SELECT COUNT(a) FROM t WHERE b > 101")
+    assert second.result(timeout=TIMEOUT).estimate is not None
+    assert srv.stats()["totals"]["admission"]["drains"] >= 2
+    srv.close()
+
+
+# --------------------------------------------------- epoch bumps mid-flight
+
+
+def test_append_rows_mid_flight_rejects_future():
+    """append_rows lands after submit but before the wave executes: the
+    future resolves with the staleness error and nothing stale is cached."""
+    table = _make_table(4_000, seed=8)
+    fw = AQPFramework(BuildParams(n_samples=2_000, seed=3),
+                      use_compression=False).ingest(table)
+    srv = _server(fw, max_wait_ms=10_000.0)
+    sql = "SELECT COUNT(a) FROM t WHERE b > 100"
+    fut = srv.submit(sql)                     # enqueued at the fresh epoch
+    fw.append_rows({k: np.asarray(v)[:100] for k, v in table.items()})
+    srv.flush()                               # wave executes against stale fw
+    with pytest.raises(RuntimeError, match="stale"):
+        fut.result(timeout=TIMEOUT)
+    assert len(srv.result_cache) == 0
+    fw.rebuild(table)
+    assert srv.query(sql).estimate is not None
+    srv.close()
+
+
+def test_rebuild_mid_flight_replans_against_new_synopsis():
+    """A rebuild that lands while a submission waits in the admission queue
+    invalidates the plan's literal encodings: the wave must re-plan against
+    the new synopsis, not execute the stale plan (silently wrong) or fail.
+    The doubled table makes a stale answer numerically obvious."""
+    table = _make_table(4_000, seed=9)
+    bigger = {k: np.concatenate([np.asarray(v), np.asarray(v)])
+              for k, v in table.items()}
+    fw = AQPFramework(BuildParams(n_samples=2_000, seed=4),
+                      use_compression=False).ingest(table)
+    srv = _server(fw, max_wait_ms=10_000.0)
+    sql = "SELECT COUNT(*) FROM t WHERE a >= 0"
+    fut = srv.submit(sql)                     # planned+tagged at old epoch
+    fw.append_rows({k: np.asarray(v)[:100] for k, v in table.items()})
+    fw.rebuild(bigger)        # merges the 100 appended rows: 8100 total
+    srv.flush()
+    res = fut.result(timeout=TIMEOUT)
+    np.testing.assert_allclose(res.estimate, 8_100, rtol=1e-6)
+    # the replanned result was cached under the NEW epoch: repeats hit it
+    executed = srv.stats()["totals"]["queries_executed"]
+    assert round(srv.query(sql).estimate) == 8_100
+    assert srv.stats()["totals"]["queries_executed"] == executed
+    srv.close()
+
+
+def test_submit_after_close_fails_cleanly(framework):
+    """submit() on a closed server rejects the future AND leaves no orphaned
+    in-flight entry for later submits of the same SQL to attach to."""
+    srv = _server(framework)
+    srv.close()
+    sql = "SELECT COUNT(a) FROM t WHERE b > 115"
+    for _ in range(2):                        # second submit must not hang
+        fut = srv.submit(sql)
+        with pytest.raises(RuntimeError, match="closed"):
+            fut.result(timeout=TIMEOUT)
+    assert not srv._inflight
+
+
+# ------------------------------------------------------- GROUP BY batching
+
+
+GROUP_SQLS = [
+    "SELECT COUNT(b) FROM t WHERE a < 300 GROUP BY cat",
+    "SELECT AVG(b) FROM t WHERE a > 100 AND b < 160 GROUP BY cat",
+    "SELECT SUM(b) FROM t GROUP BY cat",
+    "SELECT COUNT(*) FROM t WHERE b > 90 GROUP BY cat",
+]
+
+
+def _oracle_groups(framework, sql):
+    """The unbatched sequential GROUP BY path (engine.execute -> _group_by)."""
+    plan = framework.engine.plan_sql(sql)
+    return framework.engine.execute(plan.func, plan.agg_col, plan.tree,
+                                    plan.group_by).groups
+
+
+def test_group_by_leaves_bit_for_bit_numpy(framework):
+    """numpy-mode serving (leaf expansion, no kernels) is bit-for-bit equal
+    to the sequential per-category loop."""
+    srv = _server(framework, mode="numpy")
+    for sql, res in zip(GROUP_SQLS, srv.query_batch(GROUP_SQLS)):
+        assert res.groups == _oracle_groups(framework, sql), sql
+    tm = srv.stats()["tables"]["t"]
+    assert tm["group_by"]["queries"] == len(GROUP_SQLS)
+    assert tm["group_by"]["leaves_executed"] == 6 * len(GROUP_SQLS)
+    srv.close()
+
+
+def test_group_by_leaves_batched_kernel_close(framework):
+    """ref-mode serving fuses all six category leaves of each GROUP BY into
+    batched launches; estimates match the oracle to fp tolerance."""
+    srv = _server(framework, mode="ref")
+    for sql, res in zip(GROUP_SQLS, srv.query_batch(GROUP_SQLS)):
+        oracle = _oracle_groups(framework, sql)
+        assert set(res.groups) == set(oracle), sql
+        for value, triple in oracle.items():
+            np.testing.assert_allclose(res.groups[value], triple,
+                                       rtol=1e-4, atol=1e-6,
+                                       err_msg=f"{sql} [{value}]")
+    tm = srv.stats()["tables"]["t"]
+    assert tm["batched"] > 0                  # leaves actually fused
+    assert tm["group_by"]["leaves_executed"] > 0
+    srv.close()
+
+
+def test_overlapping_group_by_share_leaf_cache(framework):
+    """Textual variants of one GROUP BY (clause order differs, so the
+    normalized-SQL keys differ) share per-leaf cache entries: the second
+    query executes zero leaves."""
+    srv = _server(framework, mode="numpy")
+    a = "SELECT COUNT(b) FROM t WHERE a < 200 GROUP BY cat"
+    b = "SELECT COUNT(b) FROM t GROUP BY cat WHERE a < 200"
+    res_a = srv.query(a)
+    executed = srv.stats()["totals"]["queries_executed"]
+    res_b = srv.query(b)
+    assert res_b.groups == res_a.groups
+    assert srv.stats()["totals"]["queries_executed"] == executed
+    gb = srv.stats()["tables"]["t"]["group_by"]
+    assert gb["leaf_cache_hits"] == 6         # all of b's leaves were shared
+    srv.close()
+
+
+def test_group_by_epoch_invalidates_leaf_cache():
+    table = _make_table(4_000, seed=11)
+    fw = AQPFramework(BuildParams(n_samples=2_000, seed=5),
+                      use_compression=False).ingest(table)
+    srv = _server(fw, mode="numpy")
+    sql = "SELECT COUNT(b) FROM t WHERE a < 250 GROUP BY cat"
+    srv.query(sql)
+    fw.append_rows({k: np.asarray(v)[:500] for k, v in table.items()})
+    fw.rebuild(table)
+    executed = srv.stats()["totals"]["queries_executed"]
+    srv.query(sql)                            # leaf entries must NOT validate
+    assert srv.stats()["totals"]["queries_executed"] == executed + 1
+    srv.close()
