@@ -39,6 +39,7 @@ Two further modes (PR 3):
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import numpy as np
@@ -169,6 +170,73 @@ def _streaming_run(frameworks, workload, rate_qps: float, rng):
     }
 
 
+def _overload_run(frameworks, workloads, single_lock: bool,
+                  max_queue_depth: int = 128):
+    """Fixed-work overload: N submitter threads blast the bounded queue as
+    fast as they can (no pacing). ``shed_policy="block"`` paces producers
+    to the consumer, so every query is answered and no work is shed — the
+    measured wall time is therefore the end-to-end submit-path + drain
+    throughput under contention, comparable across modes (a metric that
+    counted raw submissions/sec would *reward* starving the worker, which
+    is exactly the single-lock failure mode).
+
+    ``single_lock=True`` runs the pre-split critical section (parse + plan
+    + leaf expansion under the one server lock) as the contention baseline
+    for the lock-split submit path. NOTE the honest caveat recorded in
+    docs/benchmarks.md: on a GIL-bound CPython host the split's gain is
+    bounded (planning is Python, so submitters serialize on the GIL
+    whether or not they serialize on a lock); the structural win shows up
+    where execution is device-side (TPU) or planning runs without the GIL.
+    """
+    n_threads = len(workloads)
+    srv = AQPServer(max_wait_ms=1.0, max_batch=64,
+                    max_queue_depth=max_queue_depth,
+                    shed_policy="block", single_lock=single_lock)
+    for name, fw in frameworks.items():
+        srv.register(name, fw)
+    futs = [[] for _ in range(n_threads)]
+    lat: dict[int, float] = {}
+    barrier = threading.Barrier(n_threads + 1)
+
+    def submitter(ti):
+        barrier.wait()
+        for sql, _name in workloads[ti]:
+            t_sub = time.perf_counter()
+            fut = srv.submit(sql)
+            key = id(fut)
+            fut.add_done_callback(
+                lambda f, k=key, t=t_sub: lat.__setitem__(
+                    k, time.perf_counter() - t))
+            futs[ti].append(fut)
+
+    threads = [threading.Thread(target=submitter, args=(ti,))
+               for ti in range(n_threads)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    submit_wall = time.perf_counter() - t0
+    srv.flush()
+    flat = [f for per in futs for f in per]
+    for fut in flat:
+        fut.result()
+    wall = time.perf_counter() - t0
+    adm = srv.stats()["totals"]["admission"]
+    srv.close()
+    lat_ms = 1e3 * np.array([lat[id(f)] for f in flat])
+    return {
+        "qps": len(flat) / wall,
+        "submit_qps": len(flat) / submit_wall,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "queue_high_water": adm["queue_high_water"],
+        "rejected": adm["rejected"],
+        "shed": adm["shed"],
+    }
+
+
 def run(rows: list, quick: bool = False):
     rng = np.random.default_rng(0)
     n = 60_000 if quick else 120_000
@@ -282,6 +350,38 @@ def run(rows: list, quick: bool = False):
     out["groupby"]["qps_b64_fused_ref"] = qps_gb_fused
     emit(rows, "serving/groupby_speedup_b16", None,
          f"{out['groupby']['speedup_b16']:.1f}x")
+
+    # Overload: 8 concurrent submitters blasting a bounded (block-policy)
+    # queue with a plan-heavy mixed pool — the lock-split submit path vs
+    # the pre-split single-lock baseline (acceptance: >= 2x; p99 bounded by
+    # the queue bound, not by queue growth). Split runs FIRST so any
+    # process-warmth advantage accrues to the baseline.
+    ov_threads = 8
+    ov_per_thread = 24 if quick else 48
+    ov_pool = pool + gb_pool
+    workloads = [_zipf_stream(rng, ov_pool, ov_per_thread)
+                 for _ in range(ov_threads)]
+    out["overload"] = {"threads": ov_threads,
+                       "queries": ov_threads * ov_per_thread,
+                       "max_queue_depth": 128}
+    _overload_run(frameworks, workloads, single_lock=False)      # warm-up
+    reps = 3                                # cheap enough even in --quick
+    runs = {"split": [], "single_lock": []}
+    for _ in range(reps):                   # interleave: box drift is real
+        for label, single in (("split", False), ("single_lock", True)):
+            runs[label].append(
+                _overload_run(frameworks, workloads, single_lock=single))
+    for label in ("split", "single_lock"):
+        med = sorted(runs[label],
+                     key=lambda r: r["qps"])[(len(runs[label]) - 1) // 2]
+        out["overload"][label] = med
+        emit(rows, f"serving/overload_qps_{label}", 1e6 / med["qps"],
+             f"{med['qps']:.0f} qps (p99 {med['p99_ms']:.1f} ms, "
+             f"high water {med['queue_high_water']})")
+    speedup = (out["overload"]["split"]["qps"]
+               / out["overload"]["single_lock"]["qps"])
+    out["overload"]["speedup"] = speedup
+    emit(rows, "serving/overload_speedup", None, f"{speedup:.1f}x")
 
     save_json("serving", out)
     return out

@@ -17,12 +17,18 @@ a multi-tenant query server:
     .batched_weightings``); GROUP BY queries expand into per-category leaf
     plans at planning time and their leaves ride the same fused launches
     (OR-trees fall back per query);
+  * **backpressure** — the admission queue is bounded (``max_queue_depth``)
+    and a full queue sheds per ``shed_policy`` (``reject`` /
+    ``shed_oldest`` / ``block``), resolving the losing futures with a
+    typed ``AdmissionRejected`` result instead of growing without limit
+    (synchronous ``query_batch`` drains-and-retries instead);
   * **LRU plan + result caches** — keyed on normalized SQL (plus
     plan-canonical per-leaf keys for GROUP BY) and the owning table's
     staleness epoch, so ``append_rows`` invalidates rather than serves
     stale results;
   * **Metrics** — per-table p50/p99 latency, throughput, cache hit rates,
-    GROUP BY expansion counters, admission queue/wait/drain telemetry.
+    GROUP BY expansion counters, admission queue/wait/drain/shed
+    telemetry.
 
 Run:
 
@@ -109,6 +115,23 @@ def main():
         print(f"  stale as expected: {exc}")
     fw.rebuild(base)
     print(f"  after rebuild: {srv.query(wave[0]).estimate:,.1f}")
+
+    print("\n== backpressure: a bounded queue sheds typed, never grows ==")
+    tiny = AQPServer(catalog=srv.catalog, max_wait_ms=10_000.0,
+                     max_queue_depth=1, shed_policy="reject")
+    queued = tiny.submit(wave[1])             # occupies the whole queue
+    turned = tiny.submit(wave[2])             # full -> AdmissionRejected
+    res = turned.result()
+    print(f"  rejected: rejected={res.rejected} reason={res.reason!r} "
+          f"queue_depth={res.queue_depth} estimate={res.estimate}")
+    tiny.flush()
+    print(f"  queued one answered: {queued.result().estimate:,.1f}")
+    print(f"  sync query_batch drains-and-retries instead: "
+          f"{len(tiny.query_batch([wave[1], wave[2], wave[3]]))} answered")
+    adm = tiny.stats()["totals"]["admission"]
+    print(f"  ledger: rejected={adm['rejected']} shed={adm['shed']} "
+          f"high_water={adm['queue_high_water']}")
+    tiny.close()
 
     print("\n== unknown table ==")
     try:

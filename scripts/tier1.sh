@@ -1,11 +1,21 @@
 #!/usr/bin/env bash
 # Fast tier-1 smoke lane: docs lint + the ROADMAP tier-1 command minus
-# @slow tests.
+# @slow tests (small-N stress variants stay in; the full-N stress suite
+# runs behind --stress with a wall-clock budget).
 #
-#   scripts/tier1.sh            # -m "not slow", fail-fast, quiet
+#   scripts/tier1.sh            # -m "not slow and not stress", fail-fast
 #   scripts/tier1.sh -k serving # extra pytest args pass through
+#   scripts/tier1.sh --stress   # full-N concurrency stress suite only,
+#                               # bounded by STRESS_BUDGET_S (default 600s)
 set -euo pipefail
 cd "$(dirname "$0")/.."
+if [[ "${1:-}" == "--stress" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        timeout "${STRESS_BUDGET_S:-600}" \
+        python -m pytest -q -m "stress" "$@"
+    exit $?
+fi
 scripts/check_docs.sh
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m pytest -x -q -m "not slow" "$@"
+    python -m pytest -x -q -m "not slow and not stress" "$@"

@@ -145,6 +145,50 @@ class FastPath:
                 betas[idx, li, :len(triple[idx])] = triple[idx]
         return betas
 
+    def _pair_betas_batch(self, ph, agg_col, leaf_lists, k2max):
+        """(B, 3, L, K2max) coverage stack for B same-shape queries.
+
+        Vectorized per-leaf beta assembly: the B leaves on pair column
+        ``li`` share the slice metadata (h, u, v-, v+), so simple-op leaves
+        stack their literals into ONE broadcasted ``coverage_single`` +
+        ``coverage_bounds`` evaluation per (column, operator) group —
+        replacing the per-query-per-wave Python calls into ``_pair_betas``.
+        Consolidated (interval-set) leaves keep the per-leaf path; they are
+        the rarity in batched waves. Bit-for-bit equal to stacking
+        ``_pair_betas`` per query (same elementwise arithmetic, broadcast
+        over a leading batch axis).
+        """
+        nq = len(leaf_lists)
+        el = len(leaf_lists[0])
+        betas = np.zeros((nq, 3, el, k2max), np.float32)
+        for li in range(el):
+            leaves = [pls[li] for pls in leaf_lists]
+            col = leaves[0].col
+            pr = ph.pair(agg_col, col)
+            h, u = pr.hy, pr.uy
+            vmin, vmax = pr.vminy, pr.vmaxy
+            k = len(np.asarray(h))
+            mu = ph.columns[col].mu
+            by_op: dict[str, list] = {}
+            for qi, leaf in enumerate(leaves):
+                if isinstance(leaf, wlib.Consolidated):
+                    triple = _slice_beta(ph, leaf, h, u, vmin, vmax, mu)
+                    for idx in range(3):
+                        betas[qi, idx, li, :k] = triple[idx]
+                else:
+                    by_op.setdefault(leaf.op, []).append(qi)
+            for op, qis in by_op.items():
+                values = np.array([[leaves[qi].value] for qi in qis],
+                                  float)                       # (Bg, 1)
+                beta = covlib.coverage_single(op, values, h, u, vmin, vmax)
+                blo, bhi = covlib.coverage_bounds(
+                    beta, h, u, ph.params.min_points, ph.chi2_table,
+                    ph.params.s1_max)
+                rows = np.asarray(qis)
+                for idx, arr in enumerate((beta, blo, bhi)):
+                    betas[rows, idx, li, :k] = arr
+        return betas
+
     # ------------------------------------------------------------ single query
 
     def __call__(self, ph, agg_col, tree, corrected):
@@ -212,8 +256,8 @@ class FastPath:
         if pair_cols:
             hpad, fpad, hxpad, k1c, k2max = self._get_stack(
                 ph, agg_col, pair_cols)
-            betas = np.stack([self._pair_betas(ph, agg_col, pls, k2max)
-                              for _, pls in splits])        # (B, 3, L, K2)
+            betas = self._pair_betas_batch(
+                ph, agg_col, [pls for _, pls in splits], k2max)  # (B,3,L,K2)
             flat = betas.reshape(nq * 3, len(pair_cols), k2max)
             prob1 = np.asarray(batched_weightings(
                 hpad, flat, fpad, hxpad,

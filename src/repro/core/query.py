@@ -31,8 +31,34 @@ class QueryResult:
     groups: dict | None = None       # GROUP BY: value -> (est, lo, hi)
     latency_s: float = 0.0
 
+    # Overridden by AdmissionRejected; lets clients branch on res.rejected
+    # without an isinstance import.
+    rejected = False
+
     def as_tuple(self):
         return (self.estimate, self.lower, self.upper)
+
+
+@dataclasses.dataclass
+class AdmissionRejected(QueryResult):
+    """Typed overload outcome: the serving layer declined to execute.
+
+    Shares the ``QueryResult`` shape (``estimate``/``lower``/``upper`` are
+    ``None``) so streaming clients that read fields never crash on an
+    overload decision, and resolves the query's future as a *result*, not an
+    exception — shedding is a policy outcome, not a failure. ``reason`` is
+    ``"reject"`` (this query was turned away at a full queue) or
+    ``"shed_oldest"`` (this query was evicted from the queue to admit a
+    newer one); ``queue_depth`` is the depth observed at decision time.
+    """
+
+    estimate: float | None = None
+    lower: float | None = None
+    upper: float | None = None
+    reason: str = "reject"
+    queue_depth: int = 0
+
+    rejected = True
 
 
 class PlanError(ValueError):

@@ -8,6 +8,7 @@ plan-shape waves whose hot path is one fused kernel launch per group
 (GROUP BY queries included, via planning-time leaf expansion). See
 ``docs/serving.md`` for the full reference.
 """
+from repro.core.query import AdmissionRejected  # noqa: F401
 from repro.serve.aqp.cache import LRUCache, normalize_sql  # noqa: F401
 from repro.serve.aqp.catalog import TableCatalog  # noqa: F401
 from repro.serve.aqp.metrics import (AdmissionMetrics, Metrics,  # noqa: F401

@@ -6,6 +6,13 @@ from the table's current epoch is a miss — appended rows can never be
 answered from a stale cached result. ``purge_table`` additionally evicts
 eagerly (wired to ``AQPFramework.on_invalidate`` by the server) so stale
 entries do not linger holding memory.
+
+Thread safety: ``LRUCache`` is deliberately unsynchronized — the server's
+lock split assigns each instance exactly one guarding lock (the plan cache
+lives under ``AQPServer._plan_lock``, the result cache under
+``AQPServer._state_lock``; see the locking section of
+``repro.serve.aqp.server``), and every access goes through the owning
+lock. Adding a lock here would double-pay on the hot path.
 """
 from __future__ import annotations
 

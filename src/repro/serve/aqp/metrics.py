@@ -116,7 +116,8 @@ class TableMetrics:
 
 
 class AdmissionMetrics:
-    """Streaming-admission telemetry: queue depth, waits, drain causes."""
+    """Streaming-admission telemetry: queue depth, waits, drain causes,
+    backpressure decisions (rejected / shed submissions)."""
 
     def __init__(self, reservoir: int = 4096):
         self._wait = _Reservoir(reservoir, seed=1)
@@ -125,10 +126,25 @@ class AdmissionMetrics:
         self.max_depth = 0
         self._depth_sum = 0
         self.causes = {"full": 0, "flush": 0, "timeout": 0}
+        self.n_rejected = 0         # new submissions turned away (reject)
+        self.n_shed = 0             # queued submissions evicted (shed_oldest)
+        self.queue_high_water = 0   # max depth observed at admit time
 
     def record_submit(self):
         """One ``AQPServer.submit`` call (cache hits and dupes included)."""
         self.n_submitted += 1
+
+    def record_shed(self, reason: str, depth: int):
+        """One backpressure decision: a submission rejected at the door
+        (``reason="reject"``) or evicted from the queue (``"shed_oldest"``).
+        Counted per *submission*, not per attached future. ``depth`` (the
+        queue depth observed at decision time) feeds the high-water mark,
+        NOT ``max_depth`` (which stays drain-time-only as documented)."""
+        if reason == "reject":
+            self.n_rejected += 1
+        else:
+            self.n_shed += 1
+        self.queue_high_water = max(self.queue_high_water, depth)
 
     def record_drain(self, stats):
         """One admission-loop drain (a ``scheduler.DrainStats``)."""
@@ -153,6 +169,9 @@ class AdmissionMetrics:
                                  if self.n_drains else 0.0),
             "wait_p50_ms": p50,
             "wait_p99_ms": p99,
+            "rejected": self.n_rejected,
+            "shed": self.n_shed,
+            "queue_high_water": self.queue_high_water,
         }
 
 

@@ -80,8 +80,11 @@ class DrainStats:
     waited_s: float
 
 
+SHED_POLICIES = ("reject", "shed_oldest", "block")
+
+
 class StreamingAdmission:
-    """Continuous admission: a queue drained into waves by a worker thread.
+    """Continuous admission: a bounded queue drained into waves by a worker.
 
     ``submit`` enqueues and returns immediately — the online-aggregation
     serving model, replacing the synchronous wave-per-call scheduler. A
@@ -92,6 +95,25 @@ class StreamingAdmission:
       * when the oldest queued submission has waited ``max_wait_ms``, or
       * immediately on ``flush()`` (used by the synchronous ``query_batch``
         wrapper so a blocking caller never pays the admission wait).
+
+    **Backpressure** (overload safety): the queue is bounded by
+    ``max_queue_depth`` (``<= 0`` = unbounded). When a submit finds the
+    queue full, ``shed_policy`` decides:
+
+      * ``"reject"`` — the *new* item is turned away (``submit`` returns
+        False after invoking ``shed_cb(item, "reject", depth)``);
+      * ``"shed_oldest"`` — the *oldest* queued item is evicted
+        (``shed_cb(old, "shed_oldest", depth)``) and the new one admitted;
+      * ``"block"`` — ``submit`` blocks until the worker drains space (the
+        producer is paced to the consumer; raises if closed while waiting).
+
+    ``shed_cb`` runs on the submitting thread with no admission lock held,
+    so it may take the server's locks and resolve futures. An item is
+    handed to exactly one of ``execute_cb`` (as part of one wave) or
+    ``shed_cb`` — never both, never twice — which is the exactly-once
+    foundation the serving layer's future-resolution contract builds on.
+    ``high_water`` records the maximum depth ever observed right after an
+    admit (the enforced bound is therefore visible, not just configured).
 
     The worker executes each wave via ``execute_cb(batch, stats)`` (supplied
     by ``AQPServer``) and keeps draining, so completed waves resolve their
@@ -104,10 +126,18 @@ class StreamingAdmission:
     """
 
     def __init__(self, execute_cb, max_wait_ms: float = 2.0,
-                 max_batch: int = 64):
+                 max_batch: int = 64, max_queue_depth: int = 0,
+                 shed_policy: str = "reject", shed_cb=None):
+        if shed_policy not in SHED_POLICIES:
+            raise ValueError(f"unknown shed_policy {shed_policy!r}; "
+                             f"expected one of {SHED_POLICIES}")
         self.execute_cb = execute_cb
         self.max_wait_ms = float(max_wait_ms)
         self.max_batch = int(max_batch)
+        self.max_queue_depth = int(max_queue_depth)
+        self.shed_policy = shed_policy
+        self.shed_cb = shed_cb or (lambda item, reason, depth: None)
+        self.high_water = 0
         self._q: collections.deque = collections.deque()
         self._cv = threading.Condition()
         self._flush = False
@@ -116,9 +146,17 @@ class StreamingAdmission:
 
     # ----------------------------------------------------------------- public
 
-    def submit(self, item, t_submit: float | None = None):
-        """Enqueue ``item`` (non-blocking) and wake the admission worker."""
+    def submit(self, item, t_submit: float | None = None) -> bool:
+        """Enqueue ``item`` and wake the admission worker.
+
+        Returns True if the item was admitted, False if the bounded queue
+        rejected it (``shed_policy="reject"``; ``shed_cb`` has then already
+        been invoked with the item). Under ``"shed_oldest"`` the call always
+        admits but may evict the queue's oldest item; under ``"block"`` it
+        waits for space (non-blocking otherwise).
+        """
         t = time.perf_counter() if t_submit is None else t_submit
+        shed = None
         with self._cv:
             if self._stop:
                 raise RuntimeError("admission queue is closed")
@@ -126,8 +164,25 @@ class StreamingAdmission:
                 self._thread = threading.Thread(
                     target=self._loop, name="aqp-admission", daemon=True)
                 self._thread.start()
-            self._q.append((t, item))
-            self._cv.notify_all()
+            bound = self.max_queue_depth
+            if bound > 0 and len(self._q) >= bound:
+                if self.shed_policy == "block":
+                    while len(self._q) >= bound and not self._stop:
+                        self._cv.wait()
+                    if self._stop:
+                        raise RuntimeError("admission queue is closed")
+                elif self.shed_policy == "reject":
+                    shed, reason = item, "reject"
+                else:                         # shed_oldest: evict to admit
+                    shed, reason = self._q.popleft()[1], "shed_oldest"
+                depth = len(self._q)
+            if shed is not item:
+                self._q.append((t, item))
+                self.high_water = max(self.high_water, len(self._q))
+                self._cv.notify_all()
+        if shed is not None:
+            self.shed_cb(shed, reason, depth)
+        return shed is not item
 
     def flush(self):
         """Drain the current queue immediately (no-op when empty)."""
@@ -182,6 +237,7 @@ class StreamingAdmission:
             now = time.perf_counter()
             waited = now - self._q[0][0]
             batch = [self._q.popleft()[1] for _ in range(take)]
+            self._cv.notify_all()   # wake producers blocked on a full queue
             return batch, DrainStats(cause, take, depth, waited)
 
     def _loop(self):

@@ -13,7 +13,31 @@ Pipeline per submitted SQL string (``submit`` -> ``QueryFuture``):
 drains the queue into execution waves under a ``max_wait_ms`` /
 ``max_batch`` policy and resolves futures as waves complete, without
 blocking later arrivals. ``query_batch`` survives as a thin synchronous
-wrapper: submit everything, flush, wait.
+wrapper: submit everything, flush, wait (with drain-and-retry when the
+bounded queue rejects a submission — see ``retry_timeout_s``).
+
+**Backpressure**: the admission queue is bounded by ``max_queue_depth``;
+a full queue resolves the overflowing submission's futures with a typed
+``AdmissionRejected`` *result* (never an exception raised in the worker)
+according to ``shed_policy`` — see ``scheduler.StreamingAdmission``.
+
+**Locking** (lock-split submit path): two locks replace the original
+single server RLock so concurrent submitters no longer serialize against
+each other or against wave resolution:
+
+  * ``_plan_lock`` — read-mostly: guards the plan cache only. Planning
+    itself (parse + literal encoding + GROUP BY leaf expansion, the
+    expensive part of admission) runs with NO lock held; only the cache
+    get/put bracket it.
+  * ``_state_lock`` — short critical sections: result cache, metrics, and
+    the in-flight dedupe map. Wave resolution snapshots futures under it
+    but calls ``set_result``/``set_exception`` outside it, so done
+    callbacks never run under (or deadlock against) a server lock.
+
+The only nesting is ``_state_lock`` -> ``_plan_lock`` (re-plan inside a
+wave); nothing acquires them in the reverse order. ``single_lock=True``
+collapses both to one lock and plans inside it — the pre-split critical
+section, kept as the contention baseline for ``benchmarks/bench_serving``.
 
 GROUP BY queries ride the batched fast path: plans arrive from
 ``core/query.py`` already expanded into per-category leaf plans, the server
@@ -38,7 +62,8 @@ import threading
 import time
 
 from repro.core import sql as sqlmod
-from repro.core.query import QueryPlan, QueryResult, assemble_groups
+from repro.core.query import (AdmissionRejected, QueryPlan, QueryResult,
+                              assemble_groups)
 from repro.serve.aqp.cache import LRUCache, normalize_sql
 from repro.serve.aqp.catalog import TableCatalog
 from repro.serve.aqp.metrics import Metrics
@@ -50,7 +75,9 @@ class QueryFuture(concurrent.futures.Future):
 
     Standard ``concurrent.futures.Future`` API (``result(timeout)``,
     ``done()``, ``exception()``, ``add_done_callback``) plus the originating
-    ``sql`` text for bookkeeping.
+    ``sql`` text for bookkeeping. Overload decisions resolve it with an
+    ``AdmissionRejected`` result (``result().rejected`` is True), never an
+    exception.
     """
 
     def __init__(self, sql: str = ""):
@@ -94,6 +121,18 @@ class AQPServer:
             submission may wait before a partial wave fires.
         max_batch: admission policy — wave fires early once this many
             submissions are queued.
+        max_queue_depth: backpressure — bound on the admission queue
+            (``<= 0`` = unbounded; default 1024).
+        shed_policy: what a full queue does — ``"reject"`` (turn the new
+            submission away), ``"shed_oldest"`` (evict the oldest queued
+            submission to admit the new one) or ``"block"`` (pace the
+            submitter until the worker drains space). Rejected/shed
+            futures resolve with ``AdmissionRejected``.
+        retry_timeout_s: ``query_batch``'s drain-and-retry budget when its
+            submissions are rejected by the bounded queue.
+        single_lock: compatibility/benchmark baseline — plan under the one
+            big server lock (the pre-split critical section) instead of the
+            lock-split submit path.
     """
 
     def __init__(self, catalog: TableCatalog | None = None,
@@ -101,22 +140,32 @@ class AQPServer:
                  plan_cache_size: int = 4096,
                  result_cache_size: int = 16384,
                  max_group: int = 256, min_group: int = 2,
-                 max_wait_ms: float = 2.0, max_batch: int = 64):
+                 max_wait_ms: float = 2.0, max_batch: int = 64,
+                 max_queue_depth: int = 1024, shed_policy: str = "reject",
+                 retry_timeout_s: float = 30.0, single_lock: bool = False):
         self.catalog = catalog or TableCatalog()
         self.scheduler = BatchScheduler(self.catalog, mode=mode,
                                         max_group=max_group,
                                         min_group=min_group)
         self.admission = StreamingAdmission(self._execute_wave,
                                             max_wait_ms=max_wait_ms,
-                                            max_batch=max_batch)
+                                            max_batch=max_batch,
+                                            max_queue_depth=max_queue_depth,
+                                            shed_policy=shed_policy,
+                                            shed_cb=self._on_shed)
         self.plan_cache = LRUCache(plan_cache_size)
         self.result_cache = LRUCache(result_cache_size)
         self.metrics = Metrics()
+        self.retry_timeout_s = float(retry_timeout_s)
+        self.single_lock = bool(single_lock)
         self._wiring: dict[str, tuple] = {}   # name -> (framework, callback)
-        # One lock guards caches, metrics and the in-flight dedupe map;
-        # taken by the submitting thread, the admission worker, and
-        # framework invalidation callbacks.
-        self._lock = threading.RLock()
+        # Lock split (see module docstring): _state_lock guards result
+        # cache + metrics + in-flight map; _plan_lock guards the plan cache.
+        # Both RLocks: invalidation callbacks and the single_lock baseline
+        # re-enter them. single_lock collapses the two into one.
+        self._state_lock = threading.RLock()
+        self._plan_lock = (self._state_lock if single_lock
+                           else threading.RLock())
         self._inflight: dict[str, _Submission] = {}
 
     # ------------------------------------------------------------ registration
@@ -164,8 +213,11 @@ class AQPServer:
         self._wiring.clear()
 
     def _purge(self, name: str):
-        with self._lock:
+        # Sequential (never nested) acquisition: purging needs no atomicity
+        # across the two caches — each entry validates its epoch anyway.
+        with self._plan_lock:
             self.plan_cache.purge_table(name)
+        with self._state_lock:
             self.result_cache.purge_table(name)
 
     # ----------------------------------------------------------------- queries
@@ -178,45 +230,30 @@ class AQPServer:
         future before ``submit`` returns, and planning errors (unknown
         table/column, stale synopsis) are set ON the future rather than
         raised, so streaming callers handle every outcome in one place.
-        Uncached queries enter the admission queue and resolve when their
-        wave completes.
+        A full admission queue resolves the future with a typed
+        ``AdmissionRejected`` result per ``shed_policy``; otherwise the
+        query enters the queue and resolves when its wave completes.
+
+        On the lock-split path the expensive planning step runs with no
+        server lock held; only the dedupe check / admission bookkeeping
+        take the short state lock.
         """
         fut = QueryFuture(sql_text)
         t_submit = time.perf_counter()
         norm = normalize_sql(sql_text)
-        with self._lock:
+        sub = None
+        with self._state_lock:
             self.metrics.admission.record_submit()
             inflight = self._inflight.get(norm)
             if inflight is not None:          # identical query already queued
                 inflight.futures.append(fut)
                 return fut
-            try:
-                table, plan, epoch = self._plan_for(norm)
-            except Exception as exc:          # PlanError / stale RuntimeError
-                fut.set_exception(exc)
-                return fut
-            rentry = self.result_cache.get(norm, self.catalog.epoch)
-            if rentry is not None:
-                self.metrics.table(table).record_result_hit()
-                fut.set_result(dataclasses.replace(rentry.value,
-                                                   latency_s=0.0))
-                return fut
-            self.result_cache.miss(table)
-            sub = _Submission(norm, table, plan, epoch, t_submit, [fut])
-            if plan.leaf_plans:
-                self._lookup_leaves(sub)
-                if not sub.missing:           # every leaf served from cache
-                    self._resolve_cached_group(sub)
-                    return fut
-            self._inflight[norm] = sub
-        try:
-            self.admission.submit(sub, t_submit)
-        except Exception as exc:              # closed server: fail, don't leak
-            with self._lock:
-                self._inflight.pop(norm, None)
-                futures = list(sub.futures)
-            for f in futures:
-                f.set_exception(exc)
+            if self.single_lock:              # legacy: plan under the lock
+                sub = self._plan_admit(fut, norm, t_submit)
+        if not self.single_lock:
+            sub = self._plan_admit(fut, norm, t_submit)
+        if sub is not None:
+            self._enqueue(sub)
         return fut
 
     def flush(self):
@@ -224,10 +261,13 @@ class AQPServer:
         self.admission.flush()
 
     def query(self, sql_text: str) -> QueryResult:
-        """Synchronous single query (submit + flush + wait)."""
+        """Synchronous single query (submit + flush + wait, with the same
+        drain-and-retry as ``query_batch`` if the queue is full)."""
         return self.query_batch([sql_text])[0]
 
-    def query_batch(self, sqls: list[str]) -> list[QueryResult]:
+    def query_batch(self, sqls: list[str],
+                    retry_timeout_s: float | None = None
+                    ) -> list[QueryResult]:
         """Synchronous wave: results align with ``sqls``.
 
         Thin wrapper over the streaming path: submits everything, flushes
@@ -235,12 +275,109 @@ class AQPServer:
         and waits. Raises PlanError for unknown tables/columns and
         RuntimeError for stale tables — the serving contract matches
         ``AQPFramework.query``.
+
+        A submission rejected by the bounded admission queue (``"reject"``
+        or ``"shed_oldest"`` shed policy under load) is **drained and
+        retried**: the queue is flushed and the query re-submitted until it
+        is answered or ``retry_timeout_s`` (default: the server's
+        ``retry_timeout_s``) elapses, at which point ``TimeoutError`` is
+        raised. A synchronous caller therefore never sees an
+        ``AdmissionRejected`` result — that outcome is for streaming
+        clients that chose to observe overload.
         """
+        budget = (self.retry_timeout_s if retry_timeout_s is None
+                  else float(retry_timeout_s))
+        deadline = time.monotonic() + budget
         futures = [self.submit(sql) for sql in sqls]
         self.flush()
-        return [fut.result() for fut in futures]
+        out = []
+        for i, fut in enumerate(futures):
+            while True:
+                res = fut.result()            # plan/stale errors raise here
+                if not getattr(res, "rejected", False):
+                    break
+                if time.monotonic() >= deadline:
+                    raise TimeoutError(
+                        f"query_batch: admission queue still full after "
+                        f"{budget:.1f}s of drain-and-retry "
+                        f"(last outcome: {res.reason}, queue depth "
+                        f"{res.queue_depth})")
+                self.flush()                  # drain, then retry
+                time.sleep(0.001)
+                fut = self.submit(sqls[i])
+                self.flush()
+            out.append(res)
+        return out
 
     # ------------------------------------------------------ submit-side helpers
+
+    def _plan_admit(self, fut: QueryFuture, norm: str,
+                    t_submit: float) -> _Submission | None:
+        """Plan ``norm``, then admit it under a short state-lock section.
+
+        Returns the ``_Submission`` the caller should enqueue, or None when
+        the future was settled inline (planning error, result-cache hit,
+        fully-cached GROUP BY) or attached to a submission another thread
+        planned concurrently. Future resolution happens after the lock is
+        released.
+        """
+        try:
+            table, plan, epoch = self._plan_for(norm)
+        except Exception as exc:          # PlanError / stale RuntimeError
+            fut.set_exception(exc)
+            return None
+        hit = None
+        with self._state_lock:
+            inflight = self._inflight.get(norm)
+            if inflight is not None:      # planned concurrently: attach
+                inflight.futures.append(fut)
+                return None
+            rentry = self.result_cache.get(norm, self.catalog.epoch)
+            if rentry is not None:
+                self.metrics.table(table).record_result_hit()
+                hit = rentry.value
+            else:
+                self.result_cache.miss(table)
+                sub = _Submission(norm, table, plan, epoch, t_submit, [fut])
+                if plan.leaf_plans:
+                    self._lookup_leaves(sub)
+                    if not sub.missing:   # every leaf served from cache
+                        hit = self._finish_cached_group(sub)
+                if hit is None:
+                    self._inflight[norm] = sub
+        if hit is not None:
+            fut.set_result(dataclasses.replace(hit, latency_s=0.0))
+            return None
+        return sub
+
+    def _enqueue(self, sub: _Submission):
+        """Hand an admitted submission to the streaming-admission queue.
+        Backpressure rejection is handled by ``_on_shed`` (wired as the
+        admission's shed callback); a closed server fails the futures."""
+        try:
+            self.admission.submit(sub, sub.t_submit)
+        except Exception as exc:          # closed server: fail, don't leak
+            with self._state_lock:
+                if self._inflight.get(sub.norm) is sub:
+                    del self._inflight[sub.norm]
+                futures = list(sub.futures)
+            for f in futures:
+                f.set_exception(exc)
+
+    def _on_shed(self, sub: _Submission, reason: str, depth: int):
+        """Backpressure decision (runs on the deciding submitter's thread,
+        no admission lock held): detach the submission from the in-flight
+        dedupe map and resolve every attached future with a typed
+        ``AdmissionRejected`` result — overload is an answer, not a worker
+        exception."""
+        with self._state_lock:
+            if self._inflight.get(sub.norm) is sub:
+                del self._inflight[sub.norm]
+            futures = list(sub.futures)
+            self.metrics.admission.record_shed(reason, depth)
+        for fut in futures:
+            fut.set_result(AdmissionRejected(reason=reason,
+                                             queue_depth=depth))
 
     def _plan_for(self, norm: str):
         """Plan (via cache) -> (table, plan, epoch the plan is valid at).
@@ -249,22 +386,32 @@ class AQPServer:
         races the planning the plan is tagged with the older epoch and can
         only ever validate — in the caches and at wave execution — against
         the synopsis it was actually planned for.
+
+        Only the plan-cache get/put take ``_plan_lock``; the planning work
+        itself (parse + encode + GROUP BY leaf expansion) runs unlocked, so
+        concurrent submitters planning *different* queries overlap. Two
+        threads planning the *same* query race benignly: both plans are
+        identical and the puts are idempotent.
         """
-        entry = self.plan_cache.get(norm, self.catalog.epoch)
-        if entry is not None:
-            return entry.table, entry.value, entry.epoch
+        with self._plan_lock:
+            entry = self.plan_cache.get(norm, self.catalog.epoch)
+            if entry is not None:
+                return entry.table, entry.value, entry.epoch
         parsed = sqlmod.parse_sql(norm)
         table = parsed.table
-        self.plan_cache.miss(table if table in self.catalog else None)
+        with self._plan_lock:
+            self.plan_cache.miss(table if table in self.catalog else None)
         epoch = self.catalog.epoch(table)
         engine = self.catalog.engine(table)   # PlanError / RuntimeError here
         plan = engine.plan_query(parsed)
-        self.plan_cache.put(norm, table, epoch, plan)
+        with self._plan_lock:
+            self.plan_cache.put(norm, table, epoch, plan)
         return table, plan, epoch
 
     def _lookup_leaves(self, sub: _Submission):
         """Fill ``sub.cached_leaves`` / ``sub.missing`` from the result cache
-        (one recorded miss per missing leaf, matching the per-leaf hits)."""
+        (one recorded miss per missing leaf, matching the per-leaf hits).
+        Caller holds ``_state_lock``."""
         sub.missing = []
         sub.cached_leaves = {}
         for i, leaf in enumerate(sub.plan.leaf_plans):
@@ -284,17 +431,18 @@ class AQPServer:
         sub.table, sub.plan, sub.epoch = self._plan_for(sub.norm)
         sub.missing = None
         if sub.plan.leaf_plans:
-            self._lookup_leaves(sub)
+            with self._state_lock:
+                self._lookup_leaves(sub)
 
-    def _resolve_cached_group(self, sub: _Submission):
-        """GROUP BY answered entirely from per-leaf cache entries."""
+    def _finish_cached_group(self, sub: _Submission) -> QueryResult:
+        """GROUP BY answered entirely from per-leaf cache entries (state
+        lock held); returns the assembled result for the caller to set."""
         result = assemble_groups(sub.plan, sub.cached_leaves)
         tm = self.metrics.table(sub.table)
         tm.record_result_hit()
         tm.record_group_expansion(0, len(sub.cached_leaves))
         self.result_cache.put(sub.norm, sub.table, sub.epoch, result)
-        for fut in sub.futures:
-            fut.set_result(dataclasses.replace(result, latency_s=0.0))
+        return result
 
     # ------------------------------------------------------- admission worker
 
@@ -313,18 +461,23 @@ class AQPServer:
         fusable — then reassembles, caches and resolves. A scheduler error
         isolates to per-item retry so one poisoned query cannot reject an
         entire wave's futures.
+
+        Locking: metrics and cache puts take the short state lock; the
+        re-plan, the scheduler execution and the future resolution all run
+        outside it, so submitters are never blocked behind a wave.
         """
         now = time.perf_counter()
-        prefailed: dict[int, Exception] = {}
-        with self._lock:
+        with self._state_lock:
             self.metrics.admission.record_drain(drain)
             for sub in batch:
                 self.metrics.admission.record_wait(now - sub.t_submit)
-                if sub.epoch != self.catalog.epoch(sub.table):
-                    try:
-                        self._replan(sub)
-                    except Exception as exc:
-                        prefailed[id(sub)] = exc
+        prefailed: dict[int, Exception] = {}
+        for sub in batch:
+            if sub.epoch != self.catalog.epoch(sub.table):
+                try:
+                    self._replan(sub)
+                except Exception as exc:
+                    prefailed[id(sub)] = exc
 
         items, slots = [], []          # slots: (submission, leaf_idx | None)
         for sub in batch:
@@ -360,55 +513,80 @@ class AQPServer:
             else:
                 leaf_out.setdefault(id(sub), {})[leaf_idx] = scheduled[k]
 
-        with self._lock:
-            for sub in batch:
+        # Caching + metrics under the state lock — taken PER SUBMISSION, not
+        # across the batch, so a submitter's short critical section can
+        # interleave with a long wave's bookkeeping. Future resolution
+        # happens outside the lock (done callbacks must never run under a
+        # server lock). Popping the in-flight entry under the lock freezes
+        # the futures list: any duplicate attached before the pop is
+        # resolved here, any submit after it plans afresh. Pure group
+        # assembly runs unlocked too.
+        for sub in batch:
+            err = failed.get(id(sub))
+            result = None
+            if err is None and sub.plan.leaf_plans:
+                executed = leaf_out.get(id(sub), {})
+                leaf_results = dict(sub.cached_leaves)
+                leaf_results.update({i: sr.result
+                                     for i, sr in executed.items()})
+                result = assemble_groups(sub.plan, leaf_results)
+                result.latency_s = sum(sr.latency_s
+                                       for sr in executed.values())
+            with self._state_lock:
                 self._inflight.pop(sub.norm, None)
-                err = failed.get(id(sub))
-                if err is not None:
-                    for fut in sub.futures:
-                        fut.set_exception(err)
-                elif sub.plan.leaf_plans:
-                    self._finish_group(sub, leaf_out.get(id(sub), {}))
-                else:
-                    self._finish_single(sub, direct[id(sub)])
+                futures = list(sub.futures)
+                if err is None:
+                    if sub.plan.leaf_plans:
+                        self._finish_group(sub, executed, result)
+                    else:
+                        result = self._finish_single(sub, direct[id(sub)])
+                    for _ in futures[1:]:      # served dupes = result hits
+                        self.metrics.table(sub.table).record_result_hit()
+            if err is not None:
+                for fut in futures:
+                    fut.set_exception(err)
+            else:
+                # Primary future gets the real latency; in-flight
+                # duplicates are served copies.
+                futures[0].set_result(result)
+                for fut in futures[1:]:
+                    fut.set_result(dataclasses.replace(result, latency_s=0.0))
 
-    def _finish_single(self, sub: _Submission, sr):
+    def _finish_single(self, sub: _Submission, sr) -> QueryResult:
+        """Cache + account one executed plain query (state lock held)."""
         self.result_cache.put(sub.norm, sub.table, sub.epoch, sr.result)
         self.metrics.table(sub.table).record(sr.latency_s, sr.batched)
-        self._resolve(sub, sr.result)
+        return sr.result
 
-    def _finish_group(self, sub: _Submission, executed: dict):
-        """Cache executed leaves, merge with cached ones, assemble, resolve."""
-        leaf_results = dict(sub.cached_leaves)
-        latency = 0.0
+    def _finish_group(self, sub: _Submission, executed: dict,
+                      result: QueryResult):
+        """Cache executed leaves + the pre-assembled group result, account
+        (state lock held; the assembly itself ran unlocked)."""
         batched = False
         for i, sr in executed.items():
             self.result_cache.put(_leaf_key(sub.plan.leaf_plans[i]),
                                   sub.table, sub.epoch, sr.result)
-            leaf_results[i] = sr.result
-            latency += sr.latency_s
             batched = batched or sr.batched
-        result = assemble_groups(sub.plan, leaf_results)
-        result.latency_s = latency
         self.result_cache.put(sub.norm, sub.table, sub.epoch, result)
         tm = self.metrics.table(sub.table)
-        tm.record(latency, batched)
+        tm.record(result.latency_s, batched)
         tm.record_group_expansion(len(executed), len(sub.cached_leaves))
-        self._resolve(sub, result)
-
-    def _resolve(self, sub: _Submission, result: QueryResult):
-        """Primary future gets the real latency; in-flight duplicates are
-        served (not executed) and count as result-cache hits."""
-        sub.futures[0].set_result(result)
-        for fut in sub.futures[1:]:
-            self.metrics.table(sub.table).record_result_hit()
-            fut.set_result(dataclasses.replace(result, latency_s=0.0))
 
     # ------------------------------------------------------------------- stats
 
     def stats(self) -> dict:
-        """Telemetry snapshot (tables + totals; see ``docs/serving.md``)."""
-        with self._lock:
-            snap = self.metrics.snapshot(self.plan_cache, self.result_cache)
-        snap["totals"]["admission"]["queue_depth"] = self.admission.depth()
+        """Telemetry snapshot (tables + totals; see ``docs/serving.md``).
+        Takes each lock separately (never nested): counters across the two
+        caches may be mutually a submit apart, which telemetry tolerates."""
+        with self._plan_lock:
+            plan_stats = self.plan_cache.stats()
+        with self._state_lock:
+            snap = self.metrics.snapshot(None, self.result_cache)
+        snap["totals"]["plan_cache"] = plan_stats
+        adm = snap["totals"]["admission"]
+        adm["queue_depth"] = self.admission.depth()
+        # The admission object tracks depth after every admit; the metrics
+        # side only sees shed-time observations — report the max of both.
+        adm["queue_high_water"] = max(adm["queue_high_water"],
+                                      self.admission.high_water)
         return snap

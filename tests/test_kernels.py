@@ -150,6 +150,51 @@ def test_fused_weightings_identity_predicate():
     np.testing.assert_allclose(out[mask], 1.0, rtol=1e-6)
 
 
+def test_pair_betas_batch_bit_for_bit(synopsis):
+    """Vectorized per-leaf beta assembly (_pair_betas_batch) is bit-for-bit
+    equal to stacking the per-query _pair_betas calls, across operators,
+    out-of-range literals and consolidated interval leaves."""
+    from repro.core import weightings as wlib
+    from repro.core.fastpath import FastPath
+    fp = FastPath(use_pallas=False)
+    rng = np.random.default_rng(5)
+    agg = 0
+    leaf_lists = []
+    for qi in range(9):
+        lo = float(rng.uniform(100, 500))
+        leaves = [
+            wlib.Leaf(1, rng.choice(["<", "<=", ">", ">=", "=", "!="]),
+                      float(rng.uniform(-50, 700))),
+            (wlib.Consolidated(2, [(lo, lo + 200.0)]) if qi % 3 == 0
+             else wlib.Leaf(2, str(rng.choice(["<", ">"])),
+                            float(rng.uniform(0, 1200)))),
+        ]
+        leaf_lists.append(leaves)
+    k2max = 512
+    batched = fp._pair_betas_batch(synopsis, agg, leaf_lists, k2max)
+    seq = np.stack([fp._pair_betas(synopsis, agg, pls, k2max)
+                    for pls in leaf_lists])
+    np.testing.assert_array_equal(batched, seq)
+
+
+def test_fastpath_batch_equals_single(synopsis):
+    """FastPath.batch (one fused launch + vectorized betas) matches the
+    per-query FastPath.__call__ triples."""
+    from repro.core.fastpath import FastPath
+    from repro.core.query import QueryEngine
+    fp = FastPath(use_pallas=False)
+    eng = QueryEngine(synopsis)
+    trees = [eng.plan_sql(f"SELECT COUNT(c0) FROM t WHERE c1 > {200 + 10 * i}"
+                          f" AND c2 < {900 - 15 * i}").tree
+             for i in range(6)]
+    batch = fp.batch(synopsis, 0, trees, corrected=False)
+    assert batch is not None
+    for tree, triple in zip(trees, batch):
+        single = fp(synopsis, 0, tree, corrected=False)
+        for got, want in zip(triple, single):
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
 def test_fastpath_equals_reference_engine(synopsis):
     from repro.core.fastpath import make_fastpath
     from repro.core.query import QueryEngine

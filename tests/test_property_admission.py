@@ -1,0 +1,86 @@
+"""Hypothesis property tests: the admission-policy state machine.
+
+Generalizes the seeded interleaving checks in ``test_stress_serving.py``:
+for ANY generated interleaving of submit / flush / timeout waits against a
+bounded ``StreamingAdmission``, every submitted item is handed to exactly
+one of the execute callback (inside exactly one wave) or the shed callback
+— never both, never twice, never dropped — and the queue bound holds.
+Skips cleanly when hypothesis is unavailable (same pattern as
+``test_property.py``).
+"""
+import time
+from collections import Counter
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve.aqp import StreamingAdmission  # noqa: E402
+
+_OPS = st.lists(
+    st.one_of(
+        st.just(("submit", 0)),
+        st.just(("flush", 0)),
+        st.integers(0, 3).map(lambda ms: ("sleep", ms)),
+    ),
+    min_size=1, max_size=50)
+
+
+def _drive(ops, adm):
+    """Apply one generated op sequence; returns the submitted items."""
+    submitted = []
+    for op, arg in ops:
+        if op == "submit":
+            item = len(submitted)
+            submitted.append(item)
+            adm.submit(item)
+        elif op == "flush":
+            adm.flush()
+        else:
+            time.sleep(arg / 1e3)
+    return submitted
+
+
+@given(ops=_OPS, max_batch=st.integers(1, 4), max_queue=st.integers(1, 4),
+       policy=st.sampled_from(["reject", "shed_oldest"]),
+       slow_us=st.sampled_from([0, 500]))
+@settings(max_examples=40, deadline=None)
+def test_every_item_resolves_exactly_once(ops, max_batch, max_queue, policy,
+                                          slow_us):
+    """submit/flush/timeout/shed interleavings: exactly-once hand-off."""
+    executed, shed = [], []
+
+    def execute(batch, stats):
+        if slow_us:
+            time.sleep(slow_us / 1e6)    # slow consumer: forces full queues
+        executed.extend(batch)
+
+    adm = StreamingAdmission(
+        execute, max_wait_ms=0.5, max_batch=max_batch,
+        max_queue_depth=max_queue, shed_policy=policy,
+        shed_cb=lambda item, reason, depth: shed.append(item))
+    submitted = _drive(ops, adm)
+    adm.close()                          # drains the remainder; joins worker
+    assert Counter(executed) + Counter(shed) == Counter(submitted)
+    assert adm.high_water <= max_queue
+    with pytest.raises(RuntimeError, match="closed"):
+        adm.submit(object())
+
+
+@given(ops=_OPS, max_batch=st.integers(1, 4), max_queue=st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_block_policy_never_sheds(ops, max_batch, max_queue):
+    """block: the producer is paced, so every item executes — the shed
+    callback must never fire and the bound must still hold."""
+    executed, shed = [], []
+    adm = StreamingAdmission(
+        lambda batch, stats: executed.extend(batch),
+        max_wait_ms=0.5, max_batch=max_batch,
+        max_queue_depth=max_queue, shed_policy="block",
+        shed_cb=lambda item, reason, depth: shed.append(item))
+    submitted = _drive(ops, adm)
+    adm.close()
+    assert shed == []
+    assert Counter(executed) == Counter(submitted)
+    assert adm.high_water <= max_queue

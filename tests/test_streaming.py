@@ -193,6 +193,104 @@ def test_submit_after_close_fails_cleanly(framework):
     assert not srv._inflight
 
 
+# ----------------------------------------------------------- backpressure
+
+
+def test_streaming_rejection_resolves_future_typed(framework):
+    """A full queue under shed_policy="reject" resolves the overflowing
+    future with a typed AdmissionRejected RESULT (never an exception)."""
+    srv = _server(framework, max_wait_ms=10_000.0, max_batch=64,
+                  max_queue_depth=1, shed_policy="reject")
+    ok = srv.submit("SELECT COUNT(a) FROM t WHERE b > 103")
+    turned = srv.submit("SELECT COUNT(a) FROM t WHERE b > 104")
+    res = turned.result(timeout=TIMEOUT)
+    assert res.rejected and res.reason == "reject"
+    assert res.as_tuple() == (None, None, None)
+    assert res.queue_depth == 1
+    srv.flush()
+    assert ok.result(timeout=TIMEOUT).estimate is not None
+    adm = srv.stats()["totals"]["admission"]
+    assert adm["rejected"] == 1 and adm["shed"] == 0
+    assert adm["queue_high_water"] == 1
+    srv.close()
+
+
+def test_shed_oldest_evicts_queued_future(framework):
+    """shed_policy="shed_oldest": the oldest queued submission (and every
+    duplicate future attached to it) resolves AdmissionRejected; the new
+    arrival takes its place and is answered."""
+    srv = _server(framework, max_wait_ms=10_000.0, max_batch=64,
+                  max_queue_depth=1, shed_policy="shed_oldest")
+    first = srv.submit("SELECT COUNT(a) FROM t WHERE b > 105")
+    dup = srv.submit("SELECT COUNT(a) FROM t WHERE b > 105")    # attaches
+    second = srv.submit("SELECT COUNT(a) FROM t WHERE b > 106")
+    res = first.result(timeout=TIMEOUT)
+    assert res.rejected and res.reason == "shed_oldest"
+    assert dup.result(timeout=TIMEOUT).rejected                 # rides along
+    srv.flush()
+    assert second.result(timeout=TIMEOUT).estimate is not None
+    adm = srv.stats()["totals"]["admission"]
+    assert adm["shed"] == 1 and adm["rejected"] == 0            # per-submission
+    assert not srv._inflight
+    srv.close()
+
+
+def test_query_batch_at_capacity_drains_and_retries(framework):
+    """Regression: query_batch on a server whose queue is at capacity had
+    no defined behavior. Now it drains and retries rejected submissions —
+    a synchronous caller never sees AdmissionRejected."""
+    srv = _server(framework, max_wait_ms=10_000.0, max_batch=64,
+                  max_queue_depth=2, shed_policy="reject")
+    sqls = [f"SELECT COUNT(a) FROM t WHERE b > {100 + i}" for i in range(8)]
+    results = srv.query_batch(sqls)
+    assert len(results) == 8
+    assert all(not r.rejected and r.estimate is not None for r in results)
+    adm = srv.stats()["totals"]["admission"]
+    assert adm["rejected"] >= 1           # the bound actually bound
+    assert adm["queue_high_water"] <= 2
+    srv.close()
+
+
+def test_query_batch_retry_timeout(framework):
+    """The drain-and-retry budget is enforced: a zero budget with a full
+    queue raises TimeoutError instead of retrying forever."""
+    srv = _server(framework, max_wait_ms=10_000.0, max_batch=64,
+                  max_queue_depth=1, shed_policy="reject")
+    sqls = [f"SELECT COUNT(a) FROM t WHERE b > {110 + i}" for i in range(3)]
+    with pytest.raises(TimeoutError, match="drain-and-retry"):
+        srv.query_batch(sqls, retry_timeout_s=0.0)
+    srv.close()
+
+
+def test_append_rows_mid_flight_with_shed_interaction():
+    """Epoch bump while submissions sit in a BOUNDED queue: the shed loser
+    resolves AdmissionRejected (it was never executed, so it must NOT get
+    the staleness error), the queued survivor fails with the staleness
+    error at wave time, and nothing stale is cached."""
+    table = _make_table(4_000, seed=21)
+    fw = AQPFramework(BuildParams(n_samples=2_000, seed=9),
+                      use_compression=False).ingest(table)
+    srv = _server(fw, max_wait_ms=10_000.0, max_batch=64,
+                  max_queue_depth=1, shed_policy="shed_oldest")
+    victim = srv.submit("SELECT COUNT(b) FROM t WHERE a < 250 GROUP BY cat")
+    survivor = srv.submit("SELECT COUNT(a) FROM t WHERE b > 100")  # evicts
+    res = victim.result(timeout=TIMEOUT)
+    assert res.rejected and res.reason == "shed_oldest"
+    fw.append_rows({k: np.asarray(v)[:100] for k, v in table.items()})
+    srv.flush()
+    with pytest.raises(RuntimeError, match="stale"):
+        survivor.result(timeout=TIMEOUT)
+    assert len(srv.result_cache) == 0
+    # a NEW submit against the stale table fails at planning, not admission
+    fut = srv.submit("SELECT COUNT(a) FROM t WHERE b > 100")
+    with pytest.raises(RuntimeError, match="stale"):
+        fut.result(timeout=TIMEOUT)
+    fw.rebuild(table)
+    assert srv.query("SELECT COUNT(a) FROM t WHERE b > 100").estimate \
+        is not None
+    srv.close()
+
+
 # ------------------------------------------------------- GROUP BY batching
 
 
