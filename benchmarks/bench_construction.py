@@ -1,18 +1,23 @@
 """§Perf (AQP side): construction benchmarks.
 
-Two comparisons:
+Three comparisons:
 
   1. paper-faithful sequential (Algorithm 1/2, recursive NumPy) vs the
      level-synchronous vectorized JAX construction (full build);
-  2. the 2-D *pair phase* in isolation: legacy per-pair host loop (one
-     compiled launch + blocking device->host sync per pair,
-     ``build.build_pairs_sequential``) vs the pair-batched path
-     (``build.build_pairs_batched``: chunked (P, N) tensors, one while_loop
-     per chunk, one grouped transfer, adaptive capacity ladder) — measured
-     at d >= 8 with a pairs-per-second metric, bit-for-bit equality
-     asserted in oracle mode. Both paths are timed via the synopsis's
-     ``build_stats`` telemetry on repeated warm builds; the reported
-     number is the median of ``repeats`` runs (2-core CI boxes are noisy).
+  2. the 2-D *pair phase* in isolation on the mixed (mostly independent)
+     workload: legacy per-pair host loop (one compiled launch + blocking
+     device->host sync per pair, ``build.build_pairs_sequential``) vs the
+     default batched path (since the compaction rewrite:
+     ``build.build_pairs_compact``) — measured at d >= 8 with a
+     pairs-per-second metric, bit-for-bit equality asserted in oracle mode;
+  3. the *correlated-pair* scenario (``--correlated`` runs it alone):
+     sequential vs the fixed-chunk scheduler
+     (``compact_drain=False``, which lockstep-drags on deep pairs) vs the
+     convergence-compacting scheduler, with the occupancy ledger.
+
+All paths are timed via the synopsis's ``build_stats`` telemetry on
+repeated warm builds; the reported number is the median of ``repeats``
+runs (2-core CI boxes are noisy).
 """
 from __future__ import annotations
 
@@ -40,6 +45,20 @@ def _pair_phase_data(n: int, d: int, rng):
     return np.stack(cols, 1)
 
 
+def _correlated_data(n: int, d: int, rng):
+    """Pairwise-dependent workload: half the columns derive from one shared
+    base, so every pair among them refines deep while the independent half
+    converges in a round or two — the exact mix where fixed-chunk
+    refinement lockstep-drags (deep pairs hold their whole chunk hostage)
+    and convergence compaction should not."""
+    base = np.abs(rng.normal(300, 90, n))
+    cols = [np.round(np.abs(rng.normal(100 * (i + 1), 20 + 10 * i, n)))
+            for i in range(d // 2)]
+    cols += [np.round(base * (1 + 0.5 * i) + rng.normal(0, 15, n))
+             for i in range(d - d // 2)]
+    return np.stack(cols, 1)
+
+
 def _timed_pair_phase(data, cols, params, repeats: int):
     syn = build_pairwise_hist(data, cols, params)    # warm jit caches
     times = []
@@ -57,9 +76,62 @@ def _assert_pairs_equal(a, b):
                                           err_msg=f"pair {key} field {f}")
 
 
-def run(rows: list, quick: bool = False):
+def _run_correlated(rows: list, out: dict, quick: bool, rng):
+    """Correlated-pair scenario: sequential vs fixed-chunk vs compacting.
+
+    The tracked numbers are the two speedups over the sequential per-pair
+    loop: the fixed-chunk scheduler historically lost most of its batching
+    win here (~1.5-1.7x; deep pairs lockstep-drag their chunk), the
+    convergence-compacting scheduler must hold >= 3x (acceptance), with the
+    occupancy ledger (pair-rounds refined vs slot-rounds paid) explaining
+    where the recovered time comes from.
+    """
+    n = 20_000 if quick else 60_000
+    d = 8
+    repeats = 2 if quick else 3
+    data = _correlated_data(n, d, rng)
+    cols = [ColumnInfo(name=f"c{i}", kind="int") for i in range(d)]
+    n_pairs = d * (d - 1) // 2
+    p_loop = BuildParams(n_samples=n, pair_batched=False)
+    p_fixed = dataclasses.replace(p_loop, pair_batched=True,
+                                  compact_drain=False)
+    p_compact = dataclasses.replace(p_loop, pair_batched=True,
+                                    compact_drain=True)
+
+    t_loop, _ = _timed_pair_phase(data, cols, p_loop, repeats)
+    t_fixed, _ = _timed_pair_phase(data, cols, p_fixed, repeats)
+    t_compact, cstats = _timed_pair_phase(data, cols, p_compact, repeats)
+
+    _assert_pairs_equal(build_pairwise_hist(data, cols, p_loop),
+                        build_pairwise_hist(data, cols, p_compact))
+    comp = cstats["compaction"]
+    out["correlated"] = {
+        "n": n, "d": d, "n_pairs": n_pairs,
+        "per_pair_loop_s": t_loop,
+        "fixed_chunk_s": t_fixed,
+        "compact_s": t_compact,
+        "speedup_fixed": t_loop / t_fixed,
+        "speedup_compact": t_loop / t_compact,
+        "pairs_per_s_compact": n_pairs / t_compact,
+        "occupancy": (comp["pair_rounds"] / comp["slot_rounds"]
+                      if comp["slot_rounds"] else None),
+        "compaction": comp,
+        "bitforbit_equal": True,
+    }
+    emit(rows, "construction/correlated_fixed_chunk", t_fixed * 1e6,
+         f"{t_loop / t_fixed:.2f}x vs loop (lockstep drag)")
+    emit(rows, "construction/correlated_compact", t_compact * 1e6,
+         f"{t_loop / t_compact:.2f}x vs loop; "
+         f"occupancy {out['correlated']['occupancy']:.2f}")
+
+
+def run(rows: list, quick: bool = False, correlated_only: bool = False):
     rng = np.random.default_rng(3)
-    out = {}
+    out: dict = {}
+    if correlated_only:
+        _run_correlated(rows, out, quick, rng)
+        save_json("construction", out)
+        return out
 
     # --- 1. paper-faithful sequential recursion vs level-sync JAX ----------
     n = 50_000 if quick else 100_000
@@ -130,11 +202,21 @@ def run(rows: list, quick: bool = False):
          f"{n_pairs / t_loop:.1f} pairs/s")
     emit(rows, "construction/pair_batched", t_batched * 1e6,
          f"{n_pairs / t_batched:.1f} pairs/s; {speedup:.2f}x vs loop")
+
+    # --- 3. correlated pairs: lockstep drag vs convergence compaction ------
+    _run_correlated(rows, out, quick, rng)
     save_json("construction", out)
     return out
 
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--correlated", action="store_true",
+                    help="run only the correlated-pair scenario")
+    args = ap.parse_args()
     rows = []
-    run(rows)
+    run(rows, quick=args.quick, correlated_only=args.correlated)
     print("\n".join(rows))

@@ -44,17 +44,36 @@ class AQPFramework:
         self.compressed = None
         self.preprocessed = None
         self.synopsis = None
-        self.engine = None
         self._raw_batches = []
         self.timings = {}
-        # Serving-layer integration: ``epoch`` bumps whenever the queryable
-        # state changes (ingest / append_rows / rebuild), so plan/result
-        # caches keyed on it can never serve stale answers; callbacks let a
+        # Serving-layer integration: the queryable state is the ATOMICALLY
+        # published (engine, epoch) pair — one tuple assignment whenever it
+        # changes (ingest / append_rows / rebuild), so a reader snapshotting
+        # ``published`` can never observe an engine with the wrong epoch
+        # (the serving scheduler's per-item epoch revalidation and the
+        # plan-time epoch capture both rely on this). Plan/result caches
+        # keyed on the epoch can never serve stale answers; callbacks let a
         # catalog purge eagerly.
-        self.epoch = 0
+        self._published: tuple = (None, 0)
         self._invalidate_cbs = []
 
     # ------------------------------------------------------- staleness hooks
+
+    @property
+    def engine(self):
+        """The current QueryEngine, or None while stale (append_rows)."""
+        return self._published[0]
+
+    @property
+    def epoch(self) -> int:
+        """Staleness epoch of the currently published queryable state."""
+        return self._published[1]
+
+    @property
+    def published(self) -> tuple:
+        """Atomic (engine, epoch) snapshot — the pair was published in one
+        assignment, so the engine is exactly the one built at that epoch."""
+        return self._published
 
     @property
     def is_stale(self) -> bool:
@@ -72,8 +91,10 @@ class AQPFramework:
         except ValueError:
             pass
 
-    def _bump_epoch(self):
-        self.epoch = next(AQPFramework._epoch_seq)
+    def _publish(self, engine):
+        """Atomically publish ``(engine, fresh epoch)`` and fire the
+        invalidation callbacks (``engine=None`` marks the table stale)."""
+        self._published = (engine, next(AQPFramework._epoch_seq))
         for cb in list(self._invalidate_cbs):
             cb(self)
 
@@ -92,7 +113,7 @@ class AQPFramework:
             self.preprocessed.data, self.preprocessed.columns, self.params,
             seed_edges=seed_edges)
         t3 = time.perf_counter()
-        self.engine = QueryEngine(self.synopsis, fastpath=self.fastpath)
+        engine = QueryEngine(self.synopsis, fastpath=self.fastpath)
         self.timings = {"preprocess_s": t1 - t0, "compress_s": t2 - t1,
                         "build_synopsis_s": t3 - t2}
         # Pair-phase telemetry from the (batched) builder: rebuild() runs
@@ -101,7 +122,7 @@ class AQPFramework:
         stats = self.synopsis.build_stats
         self.timings["build_pairs_s"] = stats.get("pair_phase_s", 0.0)
         self.timings["build_pair_mode"] = stats.get("mode", "")
-        self._bump_epoch()
+        self._publish(engine)
         return self
 
     def append_rows(self, table: dict):
@@ -109,8 +130,7 @@ class AQPFramework:
         dictionary growth forces re-coding here), mark synopsis stale."""
         self._raw_batches.append(table)
         self.synopsis = None
-        self.engine = None
-        self._bump_epoch()
+        self._publish(None)
 
     def _ensure_fresh(self):
         if self.engine is None:

@@ -6,17 +6,26 @@ Pipeline:
      then ``refine_1d`` (vmapped across all columns — one kernel refines
      every column's histogram);
   3. pair-batched 2-D refinement: the d(d-1)/2 pairs stack into (P, N_s)
-     tensors in chunks of ``BuildParams.pair_chunk`` (bucketed to powers of
-     two so jit compiles a bounded set of shapes), ONE ``lax.while_loop``
-     refines every pair of a chunk level-synchronously
-     (``refine.build_pairs_device``), and each chunk's results arrive in a
-     single grouped device->host transfer — no per-pair ``int(kx)`` /
-     ``np.asarray`` round-trips. The per-round bin-index + cell-count inner
-     loop dispatches through ``repro.kernels.hist2d.batched_hist2d``
-     (Pallas one-hot matmuls when ``params.use_pallas``; dtype-preserving
-     jnp oracle otherwise). The legacy per-pair host loop survives as
-     ``build_pairs_sequential`` (oracle + benchmark baseline; bit-for-bit
-     equal results, asserted in tests/test_build_batched.py).
+     tensors (bucketed to powers of two so jit compiles a bounded set of
+     shapes) and refine level-synchronously on device, with results
+     arriving in grouped device->host transfers — no per-pair ``int(kx)`` /
+     ``np.asarray`` round-trips. The default scheduler is
+     **convergence-compacting** (``build_pairs_compact`` /
+     ``refine.refine_2d_compact``): ``pair_chunk`` slots refine a
+     device-resident pending queue, draining each pair the round it
+     converges and backfilling its slot, so deep-refining (correlated)
+     pairs never lockstep-drag shallow ones; per-column presorts are
+     shared across all pairs (``_column_ranks``) and capacity-guard
+     escalation re-queues only the capped pairs. The fixed-chunk
+     scheduler (``build_pairs_batched``: one ``lax.while_loop`` per chunk
+     of ``pair_chunk`` pairs, whole-chunk escalation) remains behind
+     ``compact_drain=False``. Per-round bin counts dispatch through
+     ``repro.kernels.hist2d.batched_hist2d`` and chi-squared sub-bin
+     counts through ``repro.kernels.subbin`` (Pallas one-hot matmuls when
+     ``params.use_pallas``; dtype-preserving jnp oracles otherwise). The
+     legacy per-pair host loop survives as ``build_pairs_sequential``
+     (oracle + benchmark baseline; bit-for-bit equal results, asserted in
+     tests/test_build_batched.py and tests/test_build_compact.py).
 
 Missing values (NaN) are excluded per-histogram: a row missing column i does
 not contribute to hist(i) nor to any pair involving i — matching SQL
@@ -155,11 +164,37 @@ def build_pairs_sequential(sample: np.ndarray, hists: list, params,
     return raw_pairs
 
 
-def _presort_pairs_host(x, y, valid):
+def _column_ranks(sample_nn: np.ndarray) -> np.ndarray:
+    """Per-column dense ranks (d, N): ties share a rank, order preserved.
+
+    One sort + one searchsorted *per column* — shared across every pair the
+    column appears in. ``_presort_pairs_host`` composes two columns' ranks
+    into a single int64 lexicographic key, so each pair pays one stable
+    (radix) integer argsort instead of a two-key float ``np.lexsort``;
+    before this, every column was re-lexsorted once per pair (d-1 times).
+    """
+    n, d = sample_nn.shape
+    xs = np.sort(sample_nn, axis=0)
+    ranks = np.empty((d, n), np.int64)
+    for i in range(d):
+        ranks[i] = np.searchsorted(xs[:, i], sample_nn[:, i], side="left")
+    return ranks
+
+
+def _presort_pairs_host(x, y, valid, rx=None, ry=None):
     """Host-side ``refine.presort_pairs`` (numpy's sort beats XLA:CPU's).
 
     Same layout and same (stable lexsort) semantics; done once per chunk —
     the per-round unique counts then need no sort at all.
+
+    With ``rx``/``ry`` (per-pair rows of the shared ``_column_ranks``
+    table) the two-key float lexsorts become single stable argsorts of the
+    composite integer key ``rank_primary * (N+1) + rank_secondary``
+    (invalid rows get the past-the-end sentinel ``(N+1)^2``, matching the
+    +inf keys of the lexsort path). Ranks are order-isomorphic to values
+    with identical ties and both sorts are stable, so the permutations —
+    and therefore every output array — are identical to the lexsort path
+    (asserted in tests/test_build_compact.py).
     """
     n_pairs, n = x.shape
     xo1 = np.empty_like(x)
@@ -168,11 +203,18 @@ def _presort_pairs_host(x, y, valid):
     xo2 = np.empty_like(x)
     yo2 = np.empty_like(y)
     vo2 = np.empty_like(valid)
+    big = np.int64(n + 1) * np.int64(n + 1)
     for p in range(n_pairs):
-        kx = np.where(valid[p], x[p], np.inf)
-        ky = np.where(valid[p], y[p], np.inf)
-        o1 = np.lexsort((ky, kx))
-        o2 = np.lexsort((kx, ky))
+        if rx is None:
+            kx = np.where(valid[p], x[p], np.inf)
+            ky = np.where(valid[p], y[p], np.inf)
+            o1 = np.lexsort((ky, kx))
+            o2 = np.lexsort((kx, ky))
+        else:
+            key1 = np.where(valid[p], rx[p] * np.int64(n + 1) + ry[p], big)
+            key2 = np.where(valid[p], ry[p] * np.int64(n + 1) + rx[p], big)
+            o1 = np.argsort(key1, kind="stable")
+            o2 = np.argsort(key2, kind="stable")
         xo1[p], yo1[p], vo1[p] = x[p][o1], y[p][o1], valid[p][o1]
         xo2[p], yo2[p], vo2[p] = x[p][o2], y[p][o2], valid[p][o2]
     new1 = np.empty((n_pairs, n), bool)
@@ -182,6 +224,18 @@ def _presort_pairs_host(x, y, valid):
     new2[:, 0] = True
     new2[:, 1:] = yo2[:, 1:] != yo2[:, :-1]
     return xo1, yo1, vo1, new1, xo2, yo2, vo2, new2
+
+
+def _pow2_floor(n: int) -> int:
+    """Largest power of two <= n (n >= 1) — the chunk/slot bucketing rule
+    (rounding DOWN honours the documented memory ceiling)."""
+    return 1 << (max(1, n).bit_length() - 1)
+
+
+def _pow2_ceil(n: int) -> int:
+    """Smallest power of two >= n — the launch-size bucketing rule (tail
+    launches pad up so jit sees a bounded set of shapes)."""
+    return 1 << max(0, n - 1).bit_length()
 
 
 def _cap_ladder(need: int, k2_cap: int, k2_start: int) -> list[int]:
@@ -217,12 +271,12 @@ def build_pairs_batched(sample: np.ndarray, hists: list, params,
     # documented memory bound (~ pair_chunk * k2^2 * s2_max) is honoured;
     # the tail chunk buckets to the next power of two >= its size, so jit
     # sees at most log2(chunk) + 1 distinct batch shapes per capacity rung.
-    chunk = 1 << (max(1, int(params.pair_chunk)).bit_length() - 1)
+    chunk = _pow2_floor(int(params.pair_chunk))
     launches = []
     raw_pairs = {}
     for start in range(0, len(keys), chunk):
         part = keys[start:start + chunk]
-        size = 1 << max(0, len(part) - 1).bit_length()
+        size = _pow2_ceil(len(part))
         x = np.zeros((size, n_s), np.float64)
         y = np.zeros((size, n_s), np.float64)
         valid = np.zeros((size, n_s), bool)
@@ -261,6 +315,184 @@ def build_pairs_batched(sample: np.ndarray, hists: list, params,
             raw_pairs[(a, b)] = _trim_pair(*(v[p] for v in fields))
     if stats is not None:
         stats["pair_launches"] = launches
+    return raw_pairs
+
+
+# Pending pairs held device-resident per compacted launch, in units of the
+# slot count: the compaction horizon (a deep pair can only be overlapped by
+# pairs inside its group) and the (group * N) presort-upload memory bound.
+_COMPACT_QUEUE = 4
+
+
+def build_pairs_compact(sample: np.ndarray, hists: list, params,
+                        crit2, m_pts: int, stats: dict | None = None) -> dict:
+    """Convergence-compacting 2-D construction (the default batched path).
+
+    Pairs feed through ``refine.refine_2d_compact`` in groups of up to
+    ``_COMPACT_QUEUE`` chunks: ``pair_chunk`` slots refine while the rest
+    of the group waits device-resident in the pending queue, so a slot
+    whose pair converges is backfilled the same round instead of idling
+    until the chunk's slowest pair finishes (the fixed-chunk
+    ``build_pairs_batched`` failure mode on correlated columns). The
+    capacity ladder escalates *per pair*: only pairs whose guard bound
+    re-queue one rung up, where the fixed-chunk path re-runs whole chunks.
+    Per-column presorts are shared (``_column_ranks``) and each group's
+    metadata runs as one batched launch.
+
+    Results are bit-for-bit equal to ``build_pairs_sequential``: every
+    pair's refinement is the same deterministic fixed-point iteration
+    whatever the slot count, queue order, drain timing or ``occupancy_min``
+    re-bucketing (asserted in tests/test_build_compact.py). Returns
+    {(a, b): PairHist} without fold maps; records launch shapes and
+    occupancy telemetry into ``stats``.
+    """
+    K2 = params.k2_cap
+    n_s, d = sample.shape
+    keys = _pair_keys(d)
+    sample_nn = np.nan_to_num(sample, nan=0.0)
+    nanmask = np.isnan(sample)
+    ranks = _column_ranks(sample_nn)
+    slots = _pow2_floor(int(params.pair_chunk))
+    group_cap = slots * _COMPACT_QUEUE
+    occupancy = float(params.occupancy_min)
+    launches = []
+    comp = {"loop_rounds": 0, "pair_rounds": 0, "slot_rounds": 0,
+            "relaunches": 0, "escalated_pairs": 0}
+    raw_pairs = {}
+
+    for start in range(0, len(keys), group_cap):
+        part = keys[start:start + group_cap]
+        g = len(part)
+        x = np.empty((g, n_s), np.float64)
+        y = np.empty((g, n_s), np.float64)
+        valid = np.empty((g, n_s), bool)
+        rx = np.empty((g, n_s), np.int64)
+        ry = np.empty((g, n_s), np.int64)
+        kx0g = np.ones(g, np.int32)
+        ky0g = np.ones(g, np.int32)
+        for p, (a, b) in enumerate(part):
+            x[p] = sample_nn[:, a]
+            y[p] = sample_nn[:, b]
+            valid[p] = ~(nanmask[:, a] | nanmask[:, b])
+            rx[p], ry[p] = ranks[a], ranks[b]
+            kx0g[p] = min(int(hists[a].k), K2)
+            ky0g[p] = min(int(hists[b].k), K2)
+        pres = _presort_pairs_host(x, y, valid, rx, ry)
+
+        # Per-pair capacity rungs: each pair starts at the smallest ladder
+        # rung that fits ITS initial grids (the fixed-chunk path levels a
+        # whole chunk up to its widest pair), and capacity-guard escalation
+        # re-queues only the capped pairs one rung up.
+        ladder = _cap_ladder(2, K2, params.k2_start)
+        queue: dict[int, list] = {}
+        for gid in range(g):
+            need = max(int(kx0g[gid]), int(ky0g[gid]))
+            cap = next(c for c in ladder if c >= need or c == K2)
+            queue.setdefault(cap, []).append(gid)
+        final: dict[int, tuple] = {}  # gid -> (cap, ex, ey, kx, ky)
+        for rung_i, cap in enumerate(ladder):
+            pend = queue.pop(cap, [])
+            if not pend:
+                continue
+            drain_capped = cap < K2
+            # (gid, resume-state | None): fresh pairs start from their 1-D
+            # grids; resumed pairs (occupancy_min re-buckets) continue their
+            # partial refinement exactly where the previous launch left it.
+            entries = [(gid, None) for gid in pend]
+            first_launch = True
+            while entries:
+                size = _pow2_ceil(len(entries))
+                s_eff = min(slots, size)
+                idx = [gid for gid, _ in entries]
+                idx += [idx[0]] * (size - len(idx))
+                data = tuple(jnp.asarray(arr[idx]) for arr in pres)
+                ex0 = np.full((size, cap + 1), np.inf, np.float64)
+                ey0 = np.full((size, cap + 1), np.inf, np.float64)
+                ex0[:, :2] = 0.0
+                ey0[:, :2] = 0.0  # pad lanes: one empty bin, never fed
+                kx0 = np.ones(size, np.int32)
+                ky0 = np.ones(size, np.int32)
+                rounds0 = np.zeros(size, np.int32)
+                capped0 = np.zeros(size, bool)
+                for p, (gid, st) in enumerate(entries):
+                    a, b = part[gid]
+                    if st is None:
+                        ex0[p] = _pad_edges(hists[a].edges, cap)
+                        ey0[p] = _pad_edges(hists[b].edges, cap)
+                        kx0[p], ky0[p] = kx0g[gid], ky0g[gid]
+                    else:
+                        (ex0[p], ey0[p], kx0[p], ky0[p], rounds0[p],
+                         capped0[p]) = st
+                out = refine.refine_2d_compact(
+                    *data, jnp.asarray(ex0), jnp.asarray(ey0),
+                    jnp.asarray(kx0), jnp.asarray(ky0),
+                    jnp.asarray(rounds0), jnp.asarray(capped0),
+                    jnp.int32(len(entries)), jnp.float64(m_pts), crit2,
+                    jnp.float64(occupancy), n_slots=s_eff, k2=cap,
+                    s_max=params.s2_max, max_rounds=params.max_rounds_2d,
+                    drain_capped=drain_capped, use_pallas=params.use_pallas)
+                host = jax.device_get(out)  # ONE grouped transfer
+                (oex, oey, okx, oky, ocap, _ornd, odone, spair, sact,
+                 sex, sey, skx, sky, scap, srnd, loop_rounds,
+                 act_rounds) = host
+                launches.append((s_eff, cap))
+                comp["loop_rounds"] += int(loop_rounds)
+                comp["pair_rounds"] += int(act_rounds)
+                comp["slot_rounds"] += int(loop_rounds) * s_eff
+                comp["relaunches"] += 0 if first_launch else 1
+                first_launch = False
+                escalated = 0
+                for p, (gid, _) in enumerate(entries):
+                    if not odone[p]:
+                        continue  # still active in a slot: resumes below
+                    if drain_capped and ocap[p]:
+                        # Discard; re-queue one rung up (ladder[rung_i + 1]
+                        # exists whenever drain_capped).
+                        queue.setdefault(ladder[rung_i + 1], []).append(gid)
+                        escalated += 1
+                    else:
+                        final[gid] = (cap, oex[p], oey[p], int(okx[p]),
+                                      int(oky[p]))
+                comp["escalated_pairs"] += escalated
+                entries = [
+                    (entries[int(spair[s_i])][0],
+                     (sex[s_i], sey[s_i], int(skx[s_i]), int(sky[s_i]),
+                      int(srnd[s_i]), bool(scap[s_i])))
+                    for s_i in range(s_eff) if sact[s_i]]
+
+        # Metadata per rung (pairs that finished at the same capacity share
+        # a bucketed launch; trim is capacity-independent).
+        by_cap: dict[int, list] = {}
+        for gid, (cap, *_rest) in final.items():
+            by_cap.setdefault(cap, []).append(gid)
+        for cap, gids in sorted(by_cap.items()):
+            size = _pow2_ceil(len(gids))
+            idx = gids + [gids[0]] * (size - len(gids))
+            data = tuple(jnp.asarray(arr[idx]) for arr in pres)
+            ex_m = np.full((size, cap + 1), np.inf, np.float64)
+            ey_m = np.full((size, cap + 1), np.inf, np.float64)
+            ex_m[:, :2] = 0.0
+            ey_m[:, :2] = 0.0
+            kx_m = np.ones(size, np.int32)
+            ky_m = np.ones(size, np.int32)
+            for p, gid in enumerate(gids):
+                _c, fex, fey, fkx, fky = final[gid]
+                ex_m[p, : fex.size] = fex
+                ey_m[p, : fey.size] = fey
+                kx_m[p], ky_m[p] = fkx, fky
+            meta = refine.pair_metadata_batch(
+                *data, jnp.asarray(ex_m), jnp.asarray(ey_m),
+                jnp.asarray(kx_m), jnp.asarray(ky_m), k2=cap,
+                use_pallas=params.use_pallas)
+            meta_h = jax.device_get(meta)
+            for p, gid in enumerate(gids):
+                a, b = part[gid]
+                raw_pairs[(a, b)] = _trim_pair(
+                    ex_m[p], ey_m[p], kx_m[p], ky_m[p],
+                    *(v[p] for v in meta_h))
+    if stats is not None:
+        stats["pair_launches"] = launches
+        stats["compaction"] = comp
     return raw_pairs
 
 
@@ -361,14 +593,20 @@ def build_pairwise_hist(
     # --- 3. pair histograms (batched across pairs) -------------------------
     t_pairs = time.perf_counter()
     build_stats: dict = {}
-    if params.pair_batched:
+    if params.pair_batched and params.compact_drain:
+        mode = "compact"
+        raw_pairs = build_pairs_compact(sample, hists, params, crit2, m_pts,
+                                        stats=build_stats)
+    elif params.pair_batched:
+        mode = "batched"
         raw_pairs = build_pairs_batched(sample, hists, params, crit2, m_pts,
                                         stats=build_stats)
     else:
+        mode = "sequential"
         raw_pairs = build_pairs_sequential(sample, hists, params, crit2,
                                            m_pts)
     build_stats.update({
-        "mode": "batched" if params.pair_batched else "sequential",
+        "mode": mode,
         "n_pairs": len(raw_pairs),
         "pair_phase_s": time.perf_counter() - t_pairs,
         "pair_chunk": params.pair_chunk,

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.subbin import batched_subbin_hist
+
 
 def chi2_sf(x, df):
     """Survival function of the chi-squared distribution: Pr(X > x)."""
@@ -87,3 +89,32 @@ def num_subbins(u, s_max: int):
     u = jnp.asarray(u, jnp.float64)
     s = jnp.ceil(jnp.cbrt(2.0 * jnp.maximum(u, 0.0)))
     return jnp.clip(s, 1.0, float(s_max)).astype(jnp.int32)
+
+
+def subbin_counts(vals, lo, width, cell, s, valid, *, ncell: int, s_max: int,
+                  use_pallas: bool = False, interpret: bool | None = None):
+    """Kernel-backed per-cell sub-bin counts: (P, ncell, s_max) f64.
+
+    Each valid point lands in sub-bin ``r = floor(s_cell * frac)`` of its
+    cell, where ``frac`` is the point's fractional position in the cell's
+    interval along the tested dimension. The counting itself dispatches
+    through ``repro.kernels.subbin.batched_subbin_hist`` (Pallas one-hot
+    matmuls on TPU, dtype-preserving ``segment_sum`` oracle elsewhere);
+    counts are exact integers, so both backends agree bit-for-bit with the
+    legacy in-loop scatter below 2^24 points.
+
+    Every valid point lands in exactly one live sub-bin, so the last-axis
+    sum reproduces the per-cell totals — callers need no separate h_cell
+    scatter.
+
+    vals/lo/width: (P, N) per-point value + its cell's interval.
+    cell:          (P, N) flattened cell id in [0, ncell).
+    s:             (P, ncell) per-cell sub-bin counts (``num_subbins``).
+    valid:         (P, N) row mask (nulls / padding contribute weight 0).
+    """
+    s_pt = jnp.take_along_axis(s, cell, axis=1)
+    frac = jnp.where(width > 0, (vals - lo) / width, 0.0)
+    r = jnp.clip((frac * s_pt).astype(jnp.int32), 0, s_pt - 1)
+    w = jnp.where(valid, 1.0, 0.0)
+    return batched_subbin_hist(cell, r, w, ncell, s_max,
+                               use_pallas=use_pallas, interpret=interpret)

@@ -17,18 +17,29 @@ a sequential NumPy oracle in tests). In 2-D, refinement order can matter
 variant of the same procedure.
 
 All functions are jit-compatible with static capacities; 1-D refinement is
-vmapped across columns. The 2-D path is *pair-batched*: all pairs of a chunk
-stack into (P, N) tensors, ``refine_2d_batch`` runs ONE ``lax.while_loop``
-that refines every pair level-synchronously (converged pairs are at a fixed
-point — recomputing them yields no new splits), and the per-round inner loop
-(bin index + masked cell counts) dispatches through the batched hist2d
-kernel (``repro.kernels.hist2d.batched_hist2d``: Pallas one-hot matmuls on
-TPU, dtype-preserving scatter-add oracle elsewhere). Each pair is presorted
-once by (x, y) and (y, x) (``presort_pairs``), which turns the former
-per-round ``lexsort`` in ``_slice_unique`` into cheap run-boundary flag
-sums — counts are exact integers, so the batched path is bit-for-bit equal
-to the legacy per-pair ``refine_2d`` loop (asserted in tests).
-``refine_2d``/``pair_metadata`` remain as the single-pair reference path.
+vmapped across columns. The 2-D path is *pair-batched*: pairs stack into
+(P, N) tensors and one round refines every pair level-synchronously
+(``_round_2d_batch``), with the per-round cell counts dispatching through
+the batched hist2d kernel (``repro.kernels.hist2d.batched_hist2d``) and the
+chi-squared sub-bin counts through the batched sub-bin kernel
+(``repro.kernels.subbin`` via ``chi2.subbin_counts``) — Pallas one-hot
+matmuls on TPU, dtype-preserving scatter/segment-sum oracles elsewhere.
+Two schedulers drive that round:
+
+  * ``refine_2d_batch`` — fixed chunk: ONE ``lax.while_loop`` runs until
+    the slowest pair converges (converged pairs are at a fixed point —
+    recomputing them yields no new splits);
+  * ``refine_2d_compact`` — convergence-compacting: a fixed set of slots
+    refines an arbitrarily long pending queue, draining each pair the
+    round it converges and backfilling its slot, so deep-refining pairs
+    never stall shallow ones (full occupancy until the queue runs dry).
+
+Each pair is presorted once by (x, y) and (y, x) (``presort_pairs``), which
+turns the former per-round ``lexsort`` in ``_slice_unique`` into cheap
+run-boundary flag sums — counts are exact integers, so both batched
+schedulers are bit-for-bit equal to the legacy per-pair ``refine_2d`` loop
+(asserted in tests). ``refine_2d``/``pair_metadata`` remain as the
+single-pair reference path.
 """
 from __future__ import annotations
 
@@ -427,26 +438,6 @@ def _unique_flags(new_run, other_bin, valid):
     return ((new_run | (other_bin != prev)) & valid).astype(jnp.float64)
 
 
-def _subbin_hist_b(vals, lo, width, cell, s, valid, k2: int, s_max: int):
-    """Per-cell sub-bin histogram, batched: (P, ncell, s_max) f64.
-
-    Same flat-id masked segment_sum as ``_cell_chi2`` (exact integer
-    counts); every valid point lands in exactly one live sub-bin, so the
-    last-axis sum reproduces the per-cell totals — the separate h_cell
-    scatter of the legacy path is redundant.
-    """
-    p = vals.shape[0]
-    ncell = k2 * k2
-    s_pt = jnp.take_along_axis(s, cell, axis=1)
-    frac = jnp.where(width > 0, (vals - lo) / width, 0.0)
-    r = jnp.clip((frac * s_pt).astype(jnp.int32), 0, s_pt - 1)
-    flat = jnp.where(valid, cell * s_max + r, ncell * s_max)
-    ones = jnp.ones_like(vals)
-    hbar = jax.vmap(lambda f, o: jax.ops.segment_sum(
-        o, f, num_segments=ncell * s_max + 1))(flat, ones)
-    return hbar[:, :-1].reshape(p, ncell, s_max)
-
-
 def _chi2_from_hbar_b(hbar, h_cell, s, s_max: int, crit_table):
     """Batched tail of ``_cell_chi2``: identical float ops on (P, ncell)."""
     sf = jnp.maximum(s.astype(jnp.float64), 1.0)
@@ -457,6 +448,88 @@ def _chi2_from_hbar_b(hbar, h_cell, s, s_max: int, crit_table):
     stat = jnp.sum(num, axis=2) / jnp.maximum(expect, 1e-30)
     crit = crit_table[jnp.clip(s, 0, crit_table.shape[0] - 1)]
     return stat, crit
+
+
+def _round_2d_batch(xo1, yo1, vo1, new1, xo2, yo2, vo2, new2,
+                    ex, ey, kx, ky, min_points, crit_table, *,
+                    k2: int, s_max: int, use_pallas: bool,
+                    interpret: bool | None):
+    """ONE level-synchronous refinement round over P pairs.
+
+    The shared inner step of ``refine_2d_batch`` (fixed chunk) and
+    ``refine_2d_compact`` (drain/backfill active set): per-cell statistics
+    via the batched hist2d + sub-bin kernels, split selection, capacity
+    guard, edge insertion. Returns (ex, ey, kx, ky, n_split, capped_round)
+    with per-pair split and guard-bound flags for this round. Exactly the
+    ops of the legacy per-pair ``refine_2d`` body on each pair's lane, so
+    any scheduler built on it stays bit-for-bit equal to the sequential
+    path.
+    """
+    p = xo1.shape[0]
+    ncell = k2 * k2
+    bio1 = _bin_index_b(xo1, ex, kx)
+    bjo1 = _bin_index_b(yo1, ey, ky)
+    bio2 = _bin_index_b(xo2, ex, kx)
+    bjo2 = _bin_index_b(yo2, ey, ky)
+    cell1 = bio1 * k2 + bjo1
+    cell2 = bio2 * k2 + bjo2
+
+    ux_cell = batched_hist2d(
+        bio1, bjo1, _unique_flags(new1, bjo1, vo1), k2, k2,
+        use_pallas=use_pallas, interpret=interpret).reshape(p, ncell)
+    uy_cell = batched_hist2d(
+        bio2, bjo2, _unique_flags(new2, bio2, vo2), k2, k2,
+        use_pallas=use_pallas, interpret=interpret).reshape(p, ncell)
+    s_x = chi2lib.num_subbins(ux_cell, s_max)
+    s_y = chi2lib.num_subbins(uy_cell, s_max)
+
+    lox = jnp.take_along_axis(ex, bio1, axis=1)
+    wx = jnp.take_along_axis(ex, bio1 + 1, axis=1) - lox
+    loy = jnp.take_along_axis(ey, bjo2, axis=1)
+    wy = jnp.take_along_axis(ey, bjo2 + 1, axis=1) - loy
+    hbar_x = chi2lib.subbin_counts(xo1, lox, wx, cell1, s_x, vo1,
+                                   ncell=ncell, s_max=s_max,
+                                   use_pallas=use_pallas, interpret=interpret)
+    hbar_y = chi2lib.subbin_counts(yo2, loy, wy, cell2, s_y, vo2,
+                                   ncell=ncell, s_max=s_max,
+                                   use_pallas=use_pallas, interpret=interpret)
+    h_cell = jnp.sum(hbar_x, axis=2)
+    stat_x, crit_x = _chi2_from_hbar_b(hbar_x, h_cell, s_x, s_max, crit_table)
+    stat_y, crit_y = _chi2_from_hbar_b(hbar_y, h_cell, s_y, s_max, crit_table)
+
+    eligible = h_cell > min_points
+    fail_x = eligible & (ux_cell > 1.0) & (stat_x > crit_x)
+    fail_y = eligible & (uy_cell > 1.0) & (stat_y > crit_y)
+    exc_x = jnp.where(fail_x, stat_x / jnp.maximum(crit_x, 1e-30), -1.0)
+    exc_y = jnp.where(fail_y, stat_y / jnp.maximum(crit_y, 1e-30), -1.0)
+    pick_x = fail_x & (~fail_y | (exc_x >= exc_y))
+    pick_y = fail_y & ~pick_x
+
+    # cell (ti, tj) -> whole row/column wants a split (Fig. 5).
+    want_x = pick_x.reshape(p, k2, k2).any(axis=2)
+    want_y = pick_y.reshape(p, k2, k2).any(axis=1)
+
+    tK = jnp.arange(k2)[None, :]
+    zx = 0.5 * (ex[:, :-1] + ex[:, 1:])
+    zy = 0.5 * (ey[:, :-1] + ey[:, 1:])
+    ok_x = want_x & (tK < kx[:, None]) & (zx > ex[:, :-1]) & (zx < ex[:, 1:])
+    ok_y = want_y & (tK < ky[:, None]) & (zy > ey[:, :-1]) & (zy < ey[:, 1:])
+    nwx = jnp.sum(ok_x, axis=1, dtype=jnp.int32)   # wanted, pre-guard
+    nwy = jnp.sum(ok_y, axis=1, dtype=jnp.int32)
+    capped_round = (nwx > k2 - kx) | (nwy > k2 - ky)
+    rank_x = jnp.cumsum(ok_x.astype(jnp.int32), axis=1) - 1
+    rank_y = jnp.cumsum(ok_y.astype(jnp.int32), axis=1) - 1
+    ok_x = ok_x & (rank_x < (k2 - kx)[:, None])
+    ok_y = ok_y & (rank_y < (k2 - ky)[:, None])
+    nx = jnp.sum(ok_x, axis=1, dtype=jnp.int32)
+    ny = jnp.sum(ok_y, axis=1, dtype=jnp.int32)
+
+    ex = jnp.sort(jnp.concatenate(
+        [ex, jnp.where(ok_x, zx, _INF)], axis=1), axis=1)[:, : k2 + 1]
+    ey = jnp.sort(jnp.concatenate(
+        [ey, jnp.where(ok_y, zy, _INF)], axis=1), axis=1)[:, : k2 + 1]
+    return (ex, ey, (kx + nx).astype(jnp.int32), (ky + ny).astype(jnp.int32),
+            (nx + ny).astype(jnp.int32), capped_round)
 
 
 @functools.partial(jax.jit, static_argnames=("k2", "s_max", "max_rounds",
@@ -484,7 +557,6 @@ def refine_2d_batch(xo1, yo1, vo1, new1, xo2, yo2, vo2, new2,
     only saturated chunks (``build.build_pairs_batched``).
     """
     p = xo1.shape[0]
-    ncell = k2 * k2
 
     def cond(state):
         _, _, _, _, n_split, _, rounds = state
@@ -492,73 +564,167 @@ def refine_2d_batch(xo1, yo1, vo1, new1, xo2, yo2, vo2, new2,
 
     def body(state):
         ex, ey, kx, ky, _, capped, rounds = state
-        bio1 = _bin_index_b(xo1, ex, kx)
-        bjo1 = _bin_index_b(yo1, ey, ky)
-        bio2 = _bin_index_b(xo2, ex, kx)
-        bjo2 = _bin_index_b(yo2, ey, ky)
-        cell1 = bio1 * k2 + bjo1
-        cell2 = bio2 * k2 + bjo2
-
-        ux_cell = batched_hist2d(
-            bio1, bjo1, _unique_flags(new1, bjo1, vo1), k2, k2,
-            use_pallas=use_pallas, interpret=interpret).reshape(p, ncell)
-        uy_cell = batched_hist2d(
-            bio2, bjo2, _unique_flags(new2, bio2, vo2), k2, k2,
-            use_pallas=use_pallas, interpret=interpret).reshape(p, ncell)
-        s_x = chi2lib.num_subbins(ux_cell, s_max)
-        s_y = chi2lib.num_subbins(uy_cell, s_max)
-
-        lox = jnp.take_along_axis(ex, bio1, axis=1)
-        wx = jnp.take_along_axis(ex, bio1 + 1, axis=1) - lox
-        loy = jnp.take_along_axis(ey, bjo2, axis=1)
-        wy = jnp.take_along_axis(ey, bjo2 + 1, axis=1) - loy
-        hbar_x = _subbin_hist_b(xo1, lox, wx, cell1, s_x, vo1, k2, s_max)
-        hbar_y = _subbin_hist_b(yo2, loy, wy, cell2, s_y, vo2, k2, s_max)
-        h_cell = jnp.sum(hbar_x, axis=2)
-        stat_x, crit_x = _chi2_from_hbar_b(hbar_x, h_cell, s_x, s_max,
-                                           crit_table)
-        stat_y, crit_y = _chi2_from_hbar_b(hbar_y, h_cell, s_y, s_max,
-                                           crit_table)
-
-        eligible = h_cell > min_points
-        fail_x = eligible & (ux_cell > 1.0) & (stat_x > crit_x)
-        fail_y = eligible & (uy_cell > 1.0) & (stat_y > crit_y)
-        exc_x = jnp.where(fail_x, stat_x / jnp.maximum(crit_x, 1e-30), -1.0)
-        exc_y = jnp.where(fail_y, stat_y / jnp.maximum(crit_y, 1e-30), -1.0)
-        pick_x = fail_x & (~fail_y | (exc_x >= exc_y))
-        pick_y = fail_y & ~pick_x
-
-        # cell (ti, tj) -> whole row/column wants a split (Fig. 5).
-        want_x = pick_x.reshape(p, k2, k2).any(axis=2)
-        want_y = pick_y.reshape(p, k2, k2).any(axis=1)
-
-        tK = jnp.arange(k2)[None, :]
-        zx = 0.5 * (ex[:, :-1] + ex[:, 1:])
-        zy = 0.5 * (ey[:, :-1] + ey[:, 1:])
-        ok_x = want_x & (tK < kx[:, None]) & (zx > ex[:, :-1]) & (zx < ex[:, 1:])
-        ok_y = want_y & (tK < ky[:, None]) & (zy > ey[:, :-1]) & (zy < ey[:, 1:])
-        nwx = jnp.sum(ok_x, axis=1, dtype=jnp.int32)   # wanted, pre-guard
-        nwy = jnp.sum(ok_y, axis=1, dtype=jnp.int32)
-        capped = capped | (nwx > k2 - kx) | (nwy > k2 - ky)
-        rank_x = jnp.cumsum(ok_x.astype(jnp.int32), axis=1) - 1
-        rank_y = jnp.cumsum(ok_y.astype(jnp.int32), axis=1) - 1
-        ok_x = ok_x & (rank_x < (k2 - kx)[:, None])
-        ok_y = ok_y & (rank_y < (k2 - ky)[:, None])
-        nx = jnp.sum(ok_x, axis=1, dtype=jnp.int32)
-        ny = jnp.sum(ok_y, axis=1, dtype=jnp.int32)
-
-        ex = jnp.sort(jnp.concatenate(
-            [ex, jnp.where(ok_x, zx, _INF)], axis=1), axis=1)[:, : k2 + 1]
-        ey = jnp.sort(jnp.concatenate(
-            [ey, jnp.where(ok_y, zy, _INF)], axis=1), axis=1)[:, : k2 + 1]
-        return (ex, ey, (kx + nx).astype(jnp.int32),
-                (ky + ny).astype(jnp.int32),
-                (nx + ny).astype(jnp.int32), capped, rounds + 1)
+        ex, ey, kx, ky, n_split, capped_r = _round_2d_batch(
+            xo1, yo1, vo1, new1, xo2, yo2, vo2, new2, ex, ey, kx, ky,
+            min_points, crit_table, k2=k2, s_max=s_max,
+            use_pallas=use_pallas, interpret=interpret)
+        return ex, ey, kx, ky, n_split, capped | capped_r, rounds + 1
 
     state = (ex0, ey0, kx0.astype(jnp.int32), ky0.astype(jnp.int32),
              jnp.ones(p, jnp.int32), jnp.zeros(p, bool), jnp.int32(0))
     ex, ey, kx, ky, _, capped, _ = jax.lax.while_loop(cond, body, state)
     return ex, ey, kx, ky, capped
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "k2", "s_max",
+                                             "max_rounds", "drain_capped",
+                                             "use_pallas", "interpret"))
+def refine_2d_compact(xo1, yo1, vo1, new1, xo2, yo2, vo2, new2,
+                      ex0, ey0, kx0, ky0, rounds0, capped0, n_pending,
+                      min_points, crit_table, occupancy_min, *,
+                      n_slots: int, k2: int, s_max: int = 32,
+                      max_rounds: int = 16, drain_capped: bool = False,
+                      use_pallas: bool = False,
+                      interpret: bool | None = None):
+    """Convergence-compacting refinement: an S-slot active set over P pairs.
+
+    The fixed-chunk ``refine_2d_batch`` runs until the *slowest* pair of
+    its chunk converges — deep-refining (correlated) pairs lockstep-drag
+    shallow ones. Here ``n_slots`` device-side slots refine one round per
+    loop iteration; every iteration, slots whose pair converged this round
+    (no splits, or ``max_rounds`` reached, or — when ``drain_capped`` —
+    the capacity guard bound) **drain** into per-pair output buffers and
+    **backfill** from the pending queue ``[next_ptr, n_pending)``, so the
+    active set stays at full occupancy until the queue runs dry.
+
+    Inputs are the presorted arrays of ALL P pending pairs plus per-pair
+    start states (``ex0``/``ey0``/``kx0``/``ky0``/``rounds0``/``capped0``
+    — fresh pairs have rounds 0, resumed pairs their partial state).
+    ``n_pending`` (traced) is the real pair count; lanes beyond it are
+    padding and are never fed. Because each pair's round trajectory is the
+    deterministic ``_round_2d_batch`` fixed-point iteration, independent
+    of slot assignment and of its slot neighbours, the drained results are
+    **schedule-independent**: bit-for-bit equal to ``refine_2d`` on each
+    pair alone, whatever the slot count, queue order or drain timing
+    (asserted in tests/test_build_compact.py).
+
+    ``drain_capped`` (static) drains a pair the moment its guard binds —
+    used on non-final capacity rungs, where a capped result is discarded
+    and the pair re-queued one rung up, so keeping it refining would only
+    burn its slot. On the final rung it must be False (the capped result
+    is the real, fully-refined K2-capped histogram).
+
+    ``occupancy_min`` (traced, 0 disables): once the queue is empty and
+    fewer than ``ceil(occupancy_min * n_slots)`` slots remain active, the
+    loop exits early — after at least one round, so every launch makes
+    progress — and returns the unconverged slots' partial states for the
+    caller to re-bucket into a smaller launch (``build.build_pairs_compact``).
+
+    Returns ``(out_ex, out_ey, out_kx, out_ky, out_capped, out_rounds,
+    out_done, slot_pair, slot_active, sex, sey, skx, sky, scapped, srounds,
+    loop_rounds, active_rounds)`` — per-pair outputs (valid where
+    ``out_done``), the live slot state for resumption, and occupancy
+    telemetry (``active_rounds`` counts pair-rounds actually refined;
+    ``loop_rounds * n_slots`` is the slot-rounds paid).
+    """
+    P = xo1.shape[0]
+    S = n_slots
+    thr = jnp.ceil(occupancy_min * S).astype(jnp.int32)
+
+    def fill(dst_mask, src_idx, cur):
+        """Load per-pair start state into slots where ``dst_mask``."""
+        idx = jnp.clip(src_idx, 0, P - 1)
+        out = []
+        for arr, val in cur:
+            picked = arr[idx]
+            m = dst_mask[:, None] if picked.ndim == 2 else dst_mask
+            out.append(jnp.where(m, picked, val))
+        return out
+
+    slot_pair = jnp.minimum(jnp.arange(S, dtype=jnp.int32),
+                            jnp.maximum(n_pending - 1, 0).astype(jnp.int32))
+    active = jnp.arange(S) < n_pending
+    sex = ex0[slot_pair]
+    sey = ey0[slot_pair]
+    skx = kx0[slot_pair].astype(jnp.int32)
+    sky = ky0[slot_pair].astype(jnp.int32)
+    scap = capped0[slot_pair]
+    srnd = rounds0[slot_pair].astype(jnp.int32)
+    out_ex = jnp.zeros_like(ex0)
+    out_ey = jnp.zeros_like(ey0)
+    out_kx = jnp.zeros(P, jnp.int32)
+    out_ky = jnp.zeros(P, jnp.int32)
+    out_capped = jnp.zeros(P, bool)
+    out_rounds = jnp.zeros(P, jnp.int32)
+    out_done = jnp.zeros(P, bool)
+    state = (slot_pair, active, sex, sey, skx, sky, scap, srnd,
+             jnp.minimum(jnp.int32(S), n_pending.astype(jnp.int32)),
+             out_ex, out_ey, out_kx, out_ky, out_capped, out_rounds,
+             out_done, jnp.int32(0), jnp.int32(0))
+
+    def cond(st):
+        (_, active, _, _, _, _, _, _, next_ptr,
+         _, _, _, _, _, _, _, loop_rounds, _) = st
+        n_act = jnp.sum(active, dtype=jnp.int32)
+        exhausted = next_ptr >= n_pending
+        return jnp.any(active) & ((loop_rounds == 0)
+                                  | ~(exhausted & (n_act < thr)))
+
+    def body(st):
+        (slot_pair, active, sex, sey, skx, sky, scap, srnd, next_ptr,
+         out_ex, out_ey, out_kx, out_ky, out_capped, out_rounds,
+         out_done, loop_rounds, active_rounds) = st
+        nex, ney, nkx, nky, n_split, cap_r = _round_2d_batch(
+            xo1[slot_pair], yo1[slot_pair], vo1[slot_pair], new1[slot_pair],
+            xo2[slot_pair], yo2[slot_pair], vo2[slot_pair], new2[slot_pair],
+            sex, sey, skx, sky, min_points, crit_table, k2=k2, s_max=s_max,
+            use_pallas=use_pallas, interpret=interpret)
+        am = active
+        sex = jnp.where(am[:, None], nex, sex)
+        sey = jnp.where(am[:, None], ney, sey)
+        skx = jnp.where(am, nkx, skx)
+        sky = jnp.where(am, nky, sky)
+        scap = scap | (cap_r & am)
+        srnd = srnd + am.astype(jnp.int32)
+        n_split = jnp.where(am, n_split, 0)
+
+        conv = am & ((n_split == 0) | (srnd >= max_rounds))
+        if drain_capped:
+            conv = conv | (am & scap)
+
+        # Drain: scatter converged slots into their pair's output lane
+        # (index P for unconverged slots -> dropped).
+        didx = jnp.where(conv, slot_pair, P)
+        out_ex = out_ex.at[didx].set(sex, mode="drop")
+        out_ey = out_ey.at[didx].set(sey, mode="drop")
+        out_kx = out_kx.at[didx].set(skx, mode="drop")
+        out_ky = out_ky.at[didx].set(sky, mode="drop")
+        out_capped = out_capped.at[didx].set(scap, mode="drop")
+        out_rounds = out_rounds.at[didx].set(srnd, mode="drop")
+        out_done = out_done.at[didx].set(True, mode="drop")
+
+        # Backfill: rank the drained slots and hand out pending pairs.
+        offs = jnp.cumsum(conv.astype(jnp.int32)) - 1
+        nidx = next_ptr + offs
+        take = conv & (nidx < n_pending)
+        slot_pair = jnp.where(take, nidx, slot_pair).astype(jnp.int32)
+        active = jnp.where(conv, take, active)
+        sex, sey, skx, sky, scap, srnd = fill(take, slot_pair, [
+            (ex0, sex), (ey0, sey), (kx0.astype(jnp.int32), skx),
+            (ky0.astype(jnp.int32), sky), (capped0, scap),
+            (rounds0.astype(jnp.int32), srnd)])
+        next_ptr = next_ptr + jnp.sum(take, dtype=jnp.int32)
+        return (slot_pair, active, sex, sey, skx, sky, scap, srnd, next_ptr,
+                out_ex, out_ey, out_kx, out_ky, out_capped, out_rounds,
+                out_done, loop_rounds + 1,
+                active_rounds + jnp.sum(am, dtype=jnp.int32))
+
+    (slot_pair, active, sex, sey, skx, sky, scap, srnd, _next_ptr,
+     out_ex, out_ey, out_kx, out_ky, out_capped, out_rounds, out_done,
+     loop_rounds, active_rounds) = jax.lax.while_loop(cond, body, state)
+    return (out_ex, out_ey, out_kx, out_ky, out_capped, out_rounds, out_done,
+            slot_pair, active, sex, sey, skx, sky, scap, srnd,
+            loop_rounds, active_rounds)
 
 
 @functools.partial(jax.jit, static_argnames=("k2", "use_pallas", "interpret"))

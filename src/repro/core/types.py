@@ -52,6 +52,18 @@ class BuildParams:
     # result is capacity-independent otherwise). Real pair grids are tens of
     # bins, so the k2_cap^2 * s2_max chi-squared workspace shrinks ~16x.
     k2_start: int = 64                # first rung of the capacity ladder
+    # Convergence-compacting refinement (build_pairs_compact): pair_chunk
+    # slots refine a device-resident pending queue, draining each pair the
+    # round it converges and backfilling its slot, so deep (correlated)
+    # pairs never lockstep-drag shallow ones. False falls back to the
+    # fixed-chunk scheduler (the PR 2 path, kept as baseline/escape hatch).
+    compact_drain: bool = True        # drain/backfill vs fixed-chunk lockstep
+    # Early-exit threshold for a compacted launch's tail: once the pending
+    # queue is empty and fewer than ceil(occupancy_min * slots) slots are
+    # still active, the launch returns and the unconverged pairs re-bucket
+    # into a smaller power-of-two launch. 0 disables (run the tail at full
+    # slot width); results are schedule-independent either way.
+    occupancy_min: float = 0.25       # min live-slot fraction before re-bucket
 
     @property
     def min_points(self) -> int:

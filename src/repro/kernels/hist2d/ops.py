@@ -86,23 +86,32 @@ def batched_hist2d(bi, bj, weights, ki: int, kj: int, *,
 
 
 def hist2d_sharded(bi, bj, weights, ki: int, kj: int, mesh,
-                   axis: str = "data"):
+                   axis: str = "data", use_pallas: bool | None = None):
     """Row-sharded distributed bin counting (DESIGN.md §3.5).
 
     Rows shard across the mesh's ``axis``; each device bins its shard and
     the (ki, kj) count matrix reduces via the psum GSPMD inserts for the
     replicated output. This is the pod-scale construction path: refinement
     decisions depend only on these counts, so only counts ever cross chips.
+
+    Binning routes through ``batched_hist2d`` (as a P=1 batch), the same
+    dispatch the pair-batched construction loop uses — one kernel to
+    validate and tune for both scales. ``use_pallas=None`` resolves by
+    backend (Pallas on TPU, jnp oracle elsewhere — off-TPU interpret mode
+    is a correctness path, not a speed path, and the oracle needs no row
+    padding, which under GSPMD would force a reshard).
     """
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.kernels.hist2d.ref import hist2d_ref
 
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
     row_sharding = NamedSharding(mesh, P(axis))
     rep = NamedSharding(mesh, P())
     bi = jax.device_put(jnp.asarray(bi, jnp.int32), row_sharding)
     bj = jax.device_put(jnp.asarray(bj, jnp.int32), row_sharding)
     weights = jax.device_put(jnp.asarray(weights, jnp.float32), row_sharding)
-    fn = jax.jit(lambda a, b, w: hist2d_ref(a, b, w, ki, kj),
-                 out_shardings=rep)
+    fn = jax.jit(lambda a, b, w: batched_hist2d(
+        a[None], b[None], w[None], ki, kj, use_pallas=use_pallas)[0],
+        out_shardings=rep)
     return fn(bi, bj, weights)

@@ -1,0 +1,5 @@
+"""Sub-bin histogram kernel (the chi-squared inner scatter of 2-D
+refinement): pair-batched, with a Pallas one-hot-matmul kernel and a
+dtype-preserving segment-sum jnp oracle. See ``ops.py`` for the flat-id
+decomposition and padding contracts."""
+from repro.kernels.subbin.ops import batched_subbin_hist  # noqa: F401

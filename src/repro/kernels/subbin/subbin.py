@@ -1,0 +1,75 @@
+"""Pallas-TPU kernel: sub-bin histograms via one-hot matmuls on the MXU.
+
+The chi-squared uniformity test bins every point of every 2-D cell into one
+of ``s <= s_max`` equal-width sub-bins — a histogram over ``ncell * s_max``
+flattened (cell, sub-bin) ids, recomputed every refinement round. On TPU a
+``segment_sum`` scatter over that id space serializes; instead the flat id
+is decomposed base-128 as ``flat = q * 128 + r`` and each grid step turns a
+tile of TN rows into two one-hot matrices and accumulates
+
+    H += one_hot(q_tile)^T  @  (one_hot(r_tile) * w_tile)
+
+— a (KQ x TN) @ (TN x 128) systolic matmul whose 128-lane minor dimension
+is exactly the MXU lane width (no padding waste on the one-hot columns).
+The (KQ, 128) accumulator lives in VMEM across a pair's row tiles; KQ =
+ncell * s_max / 128, so the accumulator is ``ncell * s_max * 4`` bytes —
+512 KiB at the default ladder rung (k2 = 64, s_max = 32). The caller keeps
+capacity rungs small (``ops.py``); the k2 = 256 ceiling would need 8 MiB,
+which still fits VMEM but leaves no headroom for double buffering.
+
+This mirrors ``kernels/hist2d``: same grid layout, same padding contract
+(rows padded to the tile carry weight 0), same f32 accumulation (counts are
+exact integers below 2^24).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _batched_kernel(q_ref, r_ref, w_ref, out_ref, *, kq: int, tn: int):
+    """One grid step = (pair p, row tile t): accumulate into pair p's plane."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    q = q_ref[0]                                       # (TN,) i32
+    r = r_ref[0]
+    w = w_ref[0].astype(jnp.float32)
+    rows_q = jax.lax.broadcasted_iota(jnp.int32, (tn, kq), 1)
+    rows_r = jax.lax.broadcasted_iota(jnp.int32, (tn, 128), 1)
+    oh_q = (rows_q == q[:, None]).astype(jnp.float32)              # (TN, KQ)
+    oh_r = (rows_r == r[:, None]).astype(jnp.float32) * w[:, None]
+    out_ref[0] += jax.lax.dot_general(
+        oh_q, oh_r, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (KQ, 128)
+
+
+@functools.partial(jax.jit, static_argnames=("kq", "tn", "interpret"))
+def batched_subbin_hist_pallas(q, r, weights, kq: int, tn: int = 1024,
+                               interpret: bool = True):
+    """Pair-batched flat-id histogram: (P, N) -> (P, KQ, 128).
+
+    ``q``/``r`` are the base-128 digits of the flattened (cell, sub-bin) id
+    (``ops.py`` computes them); rows with out-of-histogram ids must carry
+    weight 0. The grid is (P, N // tn) with tiles innermost, so each pair's
+    accumulator plane stays VMEM-resident across its row tiles.
+    """
+    p, n = q.shape
+    assert n % tn == 0, "pad N to a multiple of the row tile in ops.py"
+    grid = (p, n // tn)
+    return pl.pallas_call(
+        functools.partial(_batched_kernel, kq=kq, tn=tn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tn), lambda pi, ti: (pi, ti)),
+            pl.BlockSpec((1, tn), lambda pi, ti: (pi, ti)),
+            pl.BlockSpec((1, tn), lambda pi, ti: (pi, ti)),
+        ],
+        out_specs=pl.BlockSpec((1, kq, 128), lambda pi, ti: (pi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, kq, 128), jnp.float32),
+        interpret=interpret,
+    )(q, r, weights)

@@ -64,12 +64,21 @@ class TableCatalog:
     def engine(self, name: str):
         """Fresh QueryEngine for ``name``; raises RuntimeError if the
         synopsis is stale (append_rows without rebuild)."""
+        return self.snapshot(name)[0]
+
+    def snapshot(self, name: str) -> tuple:
+        """Atomic ``(engine, epoch)`` for ``name`` — the framework publishes
+        the pair in one assignment, so the returned engine is exactly the
+        one built at the returned epoch (no engine/epoch tearing even when
+        a rebuild races the read). Raises PlanError for unknown tables and
+        RuntimeError for stale ones, like ``engine``."""
         fw = self.resolve(name)
-        if fw.engine is None:
+        engine, epoch = fw.published
+        if engine is None:
             raise RuntimeError(
                 f"table {name!r}: synopsis is stale after append_rows; "
                 "call rebuild() first")
-        return fw.engine
+        return engine, epoch
 
     def epoch(self, name: str) -> int:
         """Current staleness epoch of a table (cache-key component).

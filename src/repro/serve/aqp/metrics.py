@@ -129,6 +129,7 @@ class AdmissionMetrics:
         self.n_rejected = 0         # new submissions turned away (reject)
         self.n_shed = 0             # queued submissions evicted (shed_oldest)
         self.queue_high_water = 0   # max depth observed at admit time
+        self.n_stale_requeue = 0    # wave items re-enqueued on epoch races
 
     def record_submit(self):
         """One ``AQPServer.submit`` call (cache hits and dupes included)."""
@@ -145,6 +146,12 @@ class AdmissionMetrics:
         else:
             self.n_shed += 1
         self.queue_high_water = max(self.queue_high_water, depth)
+
+    def record_stale_requeue(self):
+        """One submission re-enqueued because a rebuild raced its wave
+        (the scheduler's per-item epoch re-validation refused to pair the
+        old plan with the new synopsis)."""
+        self.n_stale_requeue += 1
 
     def record_drain(self, stats):
         """One admission-loop drain (a ``scheduler.DrainStats``)."""
@@ -172,6 +179,7 @@ class AdmissionMetrics:
             "rejected": self.n_rejected,
             "shed": self.n_shed,
             "queue_high_water": self.queue_high_water,
+            "stale_requeues": self.n_stale_requeue,
         }
 
 

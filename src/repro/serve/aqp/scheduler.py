@@ -50,14 +50,20 @@ class ScheduledResult:
     """Outcome of one scheduled (planned) query.
 
     Attributes:
-        result: the ``QueryResult`` (estimate/bounds or groups dict).
+        result: the ``QueryResult`` (estimate/bounds or groups dict);
+            None when ``stale``.
         batched: True iff this query executed inside a fused batched launch.
         latency_s: per-query wall share (group wall time / group size).
+        stale: the item's table epoch moved between planning and execution
+            (a rebuild landed mid-wave), so the plan was NOT executed — its
+            literal encodings belong to a synopsis that no longer exists.
+            The caller must re-plan and retry (``AQPServer`` re-enqueues).
     """
 
-    result: QueryResult
+    result: QueryResult | None
     batched: bool           # executed via the fused batched launch
     latency_s: float        # per-query wall share (group wall / group size)
+    stale: bool = False     # epoch moved mid-wave: not executed, re-plan
 
 
 @dataclasses.dataclass
@@ -184,6 +190,25 @@ class StreamingAdmission:
             self.shed_cb(shed, reason, depth)
         return shed is not item
 
+    def requeue(self, item, t_submit: float):
+        """Re-admit an item that was already admitted once (wave retry).
+
+        Skips the backpressure bound entirely: the caller is the admission
+        worker itself (re-enqueueing a wave item whose table epoch moved),
+        so ``"block"`` would deadlock on the condition the worker alone
+        drains, and ``"reject"``/``"shed_oldest"`` would shed an already-
+        admitted query. The queue may briefly exceed ``max_queue_depth`` by
+        the handful of retried items; they re-enter at the FRONT (oldest
+        first — they keep their original submit time, so the wave deadline
+        policy treats them as the longest-waiting work).
+        """
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("admission queue is closed")
+            self._q.appendleft((t_submit, item))
+            self.high_water = max(self.high_water, len(self._q))
+            self._cv.notify_all()
+
     def flush(self):
         """Drain the current queue immediately (no-op when empty)."""
         with self._cv:
@@ -278,14 +303,28 @@ class BatchScheduler:
 
     # ----------------------------------------------------------------- public
 
-    def execute(self, items: list[tuple[str, QueryPlan]]
-                ) -> list[ScheduledResult]:
+    def execute(self, items: list[tuple]) -> list[ScheduledResult]:
         """Execute a wave of planned queries; returns results aligned with
         ``items``. Grouping is transparent: results are identical (numpy
-        mode) / fp-close (kernel modes) to per-query execution."""
+        mode) / fp-close (kernel modes) to per-query execution.
+
+        Items are ``(table, plan)`` or ``(table, plan, epoch)``. With an
+        epoch, the item's table epoch is **re-validated here, per item**,
+        against an atomic ``catalog.snapshot`` — engines are fetched at
+        execution time, so a rebuild landing after the server's wave-start
+        epoch check would otherwise pair this old plan with the new
+        synopsis (silently wrong literal encodings). The framework
+        publishes ``(engine, epoch)`` in one assignment, so a snapshot
+        whose epoch matches the plan's guarantees the engine is exactly
+        the synopsis the plan was encoded against (no tearing); executing
+        that engine stays correct even if a rebuild lands mid-execution —
+        the result is consistent at the plan's epoch and is cached under
+        it. A mismatched snapshot returns ``stale=True`` for that item
+        (nothing executes) and the caller re-plans."""
         out: list[ScheduledResult | None] = [None] * len(items)
         groups: dict[tuple, list[int]] = {}
-        for idx, (table, plan) in enumerate(items):
+        for idx, item in enumerate(items):
+            table, plan = item[0], item[1]
             shape = plan.shape_key() if self.fastpath is not None else None
             if shape is None:
                 self._run_single(items, idx, out)
@@ -304,30 +343,52 @@ class BatchScheduler:
 
     # ---------------------------------------------------------------- helpers
 
+    @staticmethod
+    def _item_epoch(item):
+        """The epoch an item's plan was made at, or None (no validation)."""
+        return item[2] if len(item) > 2 else None
+
+    def _stale_result(self) -> ScheduledResult:
+        """A per-item 'epoch moved mid-wave' outcome (plan not executed)."""
+        return ScheduledResult(None, False, 0.0, stale=True)
+
     def _run_single(self, items, idx, out):
-        table, plan = items[idx]
-        engine = self.catalog.engine(table)
+        item = items[idx]
+        table, plan, epoch = item[0], item[1], self._item_epoch(item)
+        engine, cur = self.catalog.snapshot(table)
+        if epoch is not None and cur != epoch:
+            out[idx] = self._stale_result()
+            return
         t0 = time.perf_counter()
         res = engine.execute_plan(plan)
         out[idx] = ScheduledResult(res, False, time.perf_counter() - t0)
 
     def _run_group(self, items, table, exec_col, idxs, out):
-        engine = self.catalog.engine(table)
+        engine, cur = self.catalog.snapshot(table)
+        live = []
+        for idx in idxs:
+            epoch = self._item_epoch(items[idx])
+            if epoch is not None and cur != epoch:
+                out[idx] = self._stale_result()
+            else:
+                live.append(idx)
+        if not live:
+            return
         ph = engine.ph
         t0 = time.perf_counter()
         triples = None
-        if len(idxs) > 0 and self.fastpath is not None:
-            trees = [items[idx][1].tree for idx in idxs]
+        if len(live) > 0 and self.fastpath is not None:
+            trees = [items[idx][1].tree for idx in live]
             triples = self.fastpath.batch(ph, exec_col, trees,
                                           engine.corrected)
         if triples is None:       # ineligible after all: per-query fallback
-            for idx in idxs:
+            for idx in live:
                 self._run_single(items, idx, out)
             return
-        for triple, idx in zip(triples, idxs):
+        for triple, idx in zip(triples, live):
             res = engine.execute_plan(items[idx][1], weightings=triple)
             out[idx] = ScheduledResult(res, True, 0.0)
-        share = (time.perf_counter() - t0) / len(idxs)
-        for idx in idxs:
+        share = (time.perf_counter() - t0) / len(live)
+        for idx in live:
             out[idx].latency_s = share
             out[idx].result.latency_s = share

@@ -97,6 +97,7 @@ class _Submission:
     futures: list                    # [QueryFuture]; index 0 is the primary
     missing: list | None = None      # GROUP BY: leaf indices still to execute
     cached_leaves: dict = dataclasses.field(default_factory=dict)
+    retries: int = 0                 # stale-epoch re-enqueues (bounded)
 
 
 def _leaf_key(plan: QueryPlan) -> str:
@@ -116,6 +117,9 @@ class AQPServer:
         mode: scheduler execution mode — ``"pallas"`` / ``"ref"`` /
             ``"numpy"`` / ``None`` (auto; see ``scheduler.BatchScheduler``).
         plan_cache_size / result_cache_size: LRU capacities (entries).
+        max_result_bytes: approximate byte budget for the result cache
+            (``<= 0`` = entries-only bounding); the LRU end evicts until
+            the estimated footprint fits (``cache.LRUCache``).
         max_group / min_group: fused-launch group bounds (scheduler knobs).
         max_wait_ms: admission policy — how long the oldest queued
             submission may wait before a partial wave fires.
@@ -135,10 +139,17 @@ class AQPServer:
             lock-split submit path.
     """
 
+    # A submission whose table epoch keeps moving mid-wave re-enqueues at
+    # most this many times before its futures fail (each retry implies a
+    # full rebuild landed inside one wave — more than a couple in a row
+    # means the table is being rebuilt faster than queries can run).
+    MAX_STALE_RETRIES = 5
+
     def __init__(self, catalog: TableCatalog | None = None,
                  mode: str | None = None,
                  plan_cache_size: int = 4096,
                  result_cache_size: int = 16384,
+                 max_result_bytes: int = 0,
                  max_group: int = 256, min_group: int = 2,
                  max_wait_ms: float = 2.0, max_batch: int = 64,
                  max_queue_depth: int = 1024, shed_policy: str = "reject",
@@ -154,7 +165,8 @@ class AQPServer:
                                             shed_policy=shed_policy,
                                             shed_cb=self._on_shed)
         self.plan_cache = LRUCache(plan_cache_size)
-        self.result_cache = LRUCache(result_cache_size)
+        self.result_cache = LRUCache(result_cache_size,
+                                     max_bytes=max_result_bytes)
         self.metrics = Metrics()
         self.retry_timeout_s = float(retry_timeout_s)
         self.single_lock = bool(single_lock)
@@ -350,12 +362,19 @@ class AQPServer:
             return None
         return sub
 
-    def _enqueue(self, sub: _Submission):
+    def _enqueue(self, sub: _Submission, requeue: bool = False):
         """Hand an admitted submission to the streaming-admission queue.
         Backpressure rejection is handled by ``_on_shed`` (wired as the
-        admission's shed callback); a closed server fails the futures."""
+        admission's shed callback); a closed server fails the futures.
+        ``requeue=True`` re-admits a wave item from the worker thread
+        itself, bypassing backpressure (``StreamingAdmission.requeue`` —
+        blocking or shedding there would deadlock or drop an
+        already-admitted query)."""
         try:
-            self.admission.submit(sub, sub.t_submit)
+            if requeue:
+                self.admission.requeue(sub, sub.t_submit)
+            else:
+                self.admission.submit(sub, sub.t_submit)
         except Exception as exc:          # closed server: fail, don't leak
             with self._state_lock:
                 if self._inflight.get(sub.norm) is sub:
@@ -382,10 +401,11 @@ class AQPServer:
     def _plan_for(self, norm: str):
         """Plan (via cache) -> (table, plan, epoch the plan is valid at).
 
-        The epoch is captured BEFORE the engine fetch, so if a rebuild
-        races the planning the plan is tagged with the older epoch and can
-        only ever validate — in the caches and at wave execution — against
-        the synopsis it was actually planned for.
+        Engine and epoch come from one atomic ``catalog.snapshot``, so the
+        plan is tagged with exactly the epoch of the synopsis its literals
+        were encoded against — a rebuild racing the planning can never
+        produce a plan that validates (in the caches or at wave execution)
+        against a synopsis it was not planned for.
 
         Only the plan-cache get/put take ``_plan_lock``; the planning work
         itself (parse + encode + GROUP BY leaf expansion) runs unlocked, so
@@ -401,8 +421,7 @@ class AQPServer:
         table = parsed.table
         with self._plan_lock:
             self.plan_cache.miss(table if table in self.catalog else None)
-        epoch = self.catalog.epoch(table)
-        engine = self.catalog.engine(table)   # PlanError / RuntimeError here
+        engine, epoch = self.catalog.snapshot(table)  # PlanError/RuntimeError
         plan = engine.plan_query(parsed)
         with self._plan_lock:
             self.plan_cache.put(norm, table, epoch, plan)
@@ -483,12 +502,18 @@ class AQPServer:
         for sub in batch:
             if id(sub) in prefailed:
                 continue
+            # Items carry the plan's epoch so the scheduler re-validates it
+            # per item at execution time (engines are fetched there; see
+            # BatchScheduler.execute). A rebuild landing after the pre-check
+            # above then surfaces as stale=True instead of silently pairing
+            # this plan with the new synopsis.
             if sub.plan.leaf_plans:
                 for i in sub.missing:
-                    items.append((sub.table, sub.plan.leaf_plans[i]))
+                    items.append((sub.table, sub.plan.leaf_plans[i],
+                                  sub.epoch))
                     slots.append((sub, i))
             else:
-                items.append((sub.table, sub.plan))
+                items.append((sub.table, sub.plan, sub.epoch))
                 slots.append((sub, None))
 
         errors: dict[int, Exception] = {}
@@ -505,13 +530,27 @@ class AQPServer:
         leaf_out: dict[int, dict] = {}         # id(sub) -> {leaf_idx: sr}
         failed = dict(prefailed)               # id(sub) -> first error
         direct: dict[int, object] = {}         # id(sub) -> ScheduledResult
+        stale: set[int] = set()                # id(sub) -> re-enqueue
         for k, (sub, leaf_idx) in enumerate(slots):
             if k in errors:
                 failed.setdefault(id(sub), errors[k])
+            elif scheduled[k] is not None and scheduled[k].stale:
+                # A rebuild raced this item inside the wave: the scheduler
+                # refused to pair the old plan with the new synopsis. The
+                # whole submission re-enqueues (next wave's epoch pre-check
+                # re-plans it); partial leaf results are discarded.
+                stale.add(id(sub))
             elif leaf_idx is None:
                 direct[id(sub)] = scheduled[k]
             else:
                 leaf_out.setdefault(id(sub), {})[leaf_idx] = scheduled[k]
+        for sub in batch:
+            if id(sub) in stale and id(sub) not in failed:
+                if sub.retries >= self.MAX_STALE_RETRIES:
+                    failed[id(sub)] = RuntimeError(
+                        f"table {sub.table!r}: epoch kept moving mid-wave "
+                        f"after {sub.retries} re-plans; giving up")
+                    stale.discard(id(sub))
 
         # Caching + metrics under the state lock — taken PER SUBMISSION, not
         # across the batch, so a submitter's short critical section can
@@ -522,6 +561,16 @@ class AQPServer:
         # resolved here, any submit after it plans afresh. Pure group
         # assembly runs unlocked too.
         for sub in batch:
+            if id(sub) in stale:
+                # Keep the in-flight entry (dupes still attach) and send the
+                # submission back through admission — bypassing backpressure
+                # (we ARE the worker; see _enqueue) — so the next wave's
+                # epoch pre-check re-plans it against the rebuilt synopsis.
+                sub.retries += 1
+                with self._state_lock:
+                    self.metrics.admission.record_stale_requeue()
+                self._enqueue(sub, requeue=True)
+                continue
             err = failed.get(id(sub))
             result = None
             if err is None and sub.plan.leaf_plans:

@@ -42,8 +42,8 @@ def frameworks(tables):
     return fws
 
 
-def _server(frameworks, mode):
-    srv = AQPServer(mode=mode)
+def _server(frameworks, mode, **kwargs):
+    srv = AQPServer(mode=mode, **kwargs)
     for name, fw in frameworks.items():
         srv.register(name, fw)
     return srv
@@ -159,6 +159,58 @@ def test_plan_and_result_cache_hits(frameworks):
     res = srv.query_batch(["SELECT SUM(y) FROM logs WHERE x > 99"] * 5)
     assert len({r.as_tuple() for r in res}) == 1
     assert srv.stats()["totals"]["queries_executed"] == 2
+
+
+def test_result_cache_byte_budget():
+    """The byte budget evicts from the LRU end until the estimated
+    footprint fits, counts those evictions separately, and drops a value
+    larger than the whole budget outright."""
+    from repro.serve.aqp.cache import LRUCache, approx_nbytes
+    payload = np.zeros(1000)                     # ~8 KB each
+    per_entry = approx_nbytes(payload)
+    assert per_entry >= payload.nbytes
+    cache = LRUCache(capacity=100, max_bytes=3 * per_entry)
+    for i in range(5):
+        cache.put(f"q{i}", "t", 1, payload)
+    assert len(cache) == 3                       # budget, not capacity, binds
+    assert cache.nbytes <= cache.max_bytes
+    assert cache.byte_evictions == 2
+    assert cache.get("q0", lambda t: 1) is None  # LRU end evicted
+    assert cache.get("q4", lambda t: 1) is not None
+    # refreshing an existing key replaces its bytes, not double-counts
+    before = cache.nbytes
+    cache.put("q4", "t", 1, payload)
+    assert cache.nbytes == before
+    # an oversized single value never sticks AND never churns warm
+    # entries out on its way through
+    cache.put("big", "t", 1, np.zeros(10_000))
+    assert cache.get("big", lambda t: 1) is None
+    assert len(cache) == 3                       # q2/q3/q4 survived
+    assert cache.get("q4", lambda t: 1) is not None
+    assert cache.nbytes <= cache.max_bytes
+    # purge/stale eviction keep the ledger consistent
+    cache.purge_table("t")
+    assert cache.nbytes == 0 and len(cache) == 0
+    st = cache.stats()
+    assert st["max_bytes"] == 3 * per_entry
+    assert st["byte_evictions"] == cache.byte_evictions
+
+
+def test_server_max_result_bytes_knob(frameworks):
+    """max_result_bytes wires through to the result cache and surfaces in
+    the telemetry snapshot; a tiny budget keeps the cache near-empty but
+    answers stay correct."""
+    srv = _server(frameworks, mode="numpy", max_result_bytes=1)
+    sqls = [f"SELECT COUNT(a) FROM sensors WHERE b > {100 + i}"
+            for i in range(4)]
+    res = srv.query_batch(sqls)
+    assert all(r.estimate is not None for r in res)
+    st = srv.stats()["totals"]["result_cache"]
+    assert st["max_bytes"] == 1
+    assert st["size"] == 0                   # every result outgrew the budget
+    assert st["byte_evictions"] >= len(sqls)
+    assert st["bytes"] == 0
+    srv.close()
 
 
 def test_normalize_sql():

@@ -180,6 +180,90 @@ def test_rebuild_mid_flight_replans_against_new_synopsis():
     srv.close()
 
 
+def test_rebuild_mid_wave_execution_requeues_and_replans():
+    """Regression for the wave-execution epoch window: a rebuild landing
+    AFTER the wave's epoch pre-check but DURING scheduler execution must
+    not pair the old plan with the new synopsis. The scheduler's per-item
+    epoch re-validation (inside ``BatchScheduler.execute``) marks the item
+    stale, the server re-enqueues the submission, and the next wave
+    re-plans against the rebuilt table — the doubled table makes a stale
+    answer numerically obvious."""
+    table = _make_table(4_000, seed=21)
+    bigger = {k: np.concatenate([np.asarray(v), np.asarray(v)])
+              for k, v in table.items()}
+    fw = AQPFramework(BuildParams(n_samples=2_000, seed=5),
+                      use_compression=False).ingest(table)
+    srv = _server(fw, max_wait_ms=5.0)
+    real_execute = srv.scheduler.execute
+    fired = []
+
+    def racing_execute(items):
+        if not fired:                 # first wave only: simulate the race
+            fired.append(True)
+            fw.rebuild(bigger)        # lands inside the wave, post pre-check
+        return real_execute(items)
+
+    srv.scheduler.execute = racing_execute
+    res = srv.query("SELECT COUNT(*) FROM t WHERE a >= 0")
+    np.testing.assert_allclose(res.estimate, 8_000, rtol=1e-6)
+    assert srv.stats()["totals"]["admission"]["stale_requeues"] >= 1
+    srv.close()
+
+
+def test_stale_requeue_bypasses_block_backpressure():
+    """The stale re-enqueue runs ON the admission worker thread; with the
+    bounded queue full under shed_policy="block" it must bypass the bound
+    — blocking there would deadlock the worker on the condition only it
+    can drain, hanging every queued future."""
+    table = _make_table(2_000, seed=23)
+    bigger = {k: np.concatenate([np.asarray(v), np.asarray(v)])
+              for k, v in table.items()}
+    fw = AQPFramework(BuildParams(n_samples=1_000, seed=7),
+                      use_compression=False).ingest(table)
+    srv = _server(fw, max_wait_ms=5.0, max_queue_depth=1,
+                  shed_policy="block")
+    real_execute = srv.scheduler.execute
+    fired, extra = [], []
+
+    def racing(items):
+        if not fired:
+            fired.append(True)
+            # fill the bounded queue to its limit, then move the epoch:
+            # the wave item's requeue now meets a FULL queue
+            extra.append(srv.submit("SELECT COUNT(*) FROM t WHERE a >= 1"))
+            fw.rebuild(bigger)
+        return real_execute(items)
+
+    srv.scheduler.execute = racing
+    fut = srv.submit("SELECT COUNT(*) FROM t WHERE a >= 0")
+    srv.flush()
+    res = fut.result(timeout=TIMEOUT)          # pre-fix: deadlocked here
+    np.testing.assert_allclose(res.estimate, 4_000, rtol=1e-6)
+    assert extra[0].result(timeout=TIMEOUT).estimate is not None
+    srv.close()
+
+
+def test_stale_retry_bound_fails_futures():
+    """A table rebuilt inside EVERY wave exhausts MAX_STALE_RETRIES and
+    fails the future instead of re-enqueueing forever."""
+    table = _make_table(2_000, seed=22)
+    fw = AQPFramework(BuildParams(n_samples=1_000, seed=6),
+                      use_compression=False).ingest(table)
+    srv = _server(fw, max_wait_ms=1.0)
+    real_execute = srv.scheduler.execute
+
+    def always_racing(items):
+        fw.rebuild(table)             # epoch moves inside every wave
+        return real_execute(items)
+
+    srv.scheduler.execute = always_racing
+    fut = srv.submit("SELECT COUNT(*) FROM t WHERE a >= 0")
+    srv.flush()
+    with pytest.raises(RuntimeError, match="epoch kept moving"):
+        fut.result(timeout=TIMEOUT)
+    srv.close()
+
+
 def test_submit_after_close_fails_cleanly(framework):
     """submit() on a closed server rejects the future AND leaves no orphaned
     in-flight entry for later submits of the same SQL to attach to."""
