@@ -22,15 +22,18 @@ runs (2-core CI boxes are noisy).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import numpy as np
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import RESULTS_DIR, emit, save_json
 from repro.core import chi2 as chi2lib
 from repro.core import ref_sequential
 from repro.core.build import build_pairwise_hist
 from repro.core.types import BuildParams, ColumnInfo
+from repro.obs.export import (timeline_to_events, validate_trace_events,
+                              write_trace)
 
 
 def _pair_phase_data(n: int, d: int, rng):
@@ -125,11 +128,44 @@ def _run_correlated(rows: list, out: dict, quick: bool, rng):
          f"occupancy {out['correlated']['occupancy']:.2f}")
 
 
-def run(rows: list, quick: bool = False, correlated_only: bool = False):
+def _trace_build(rows: list, out: dict, quick: bool, rng):
+    """Build-phase timeline export: one instrumented build's per-phase /
+    per-round event stream (``build_stats["timeline"]``) rendered to a
+    validated Perfetto trace_event artifact, with the phase-seconds summary
+    recorded so the JSON tells the same story as the trace."""
+    n = 20_000 if quick else 60_000
+    d = 8
+    data = _correlated_data(n, d, rng)
+    cols = [ColumnInfo(name=f"c{i}", kind="int") for i in range(d)]
+    syn = build_pairwise_hist(data, cols, BuildParams(n_samples=n))
+    stats = syn.build_stats
+    events = timeline_to_events(stats["timeline"])
+    problems = validate_trace_events(events)
+    path = write_trace(os.path.join(RESULTS_DIR, "construction_trace.json"),
+                       events)
+    out["trace"] = {
+        "n": n, "d": d,
+        "phase_s": dict(stats.get("phase_s", {})),
+        "events": len(events),
+        "valid": not problems,
+        "path": path,
+    }
+    emit(rows, "construction/trace_artifact", None,
+         f"{len(events)} events, valid={not problems} -> {path}")
+    for phase, secs in sorted(out["trace"]["phase_s"].items(),
+                              key=lambda kv: -kv[1]):
+        emit(rows, f"construction/phase_{phase}", secs * 1e6,
+             f"{secs * 1e3:.1f} ms")
+
+
+def run(rows: list, quick: bool = False, correlated_only: bool = False,
+        trace: bool = False):
     rng = np.random.default_rng(3)
     out: dict = {}
     if correlated_only:
         _run_correlated(rows, out, quick, rng)
+        if trace:
+            _trace_build(rows, out, quick, rng)
         save_json("construction", out)
         return out
 
@@ -205,6 +241,8 @@ def run(rows: list, quick: bool = False, correlated_only: bool = False):
 
     # --- 3. correlated pairs: lockstep drag vs convergence compaction ------
     _run_correlated(rows, out, quick, rng)
+    if trace:
+        _trace_build(rows, out, quick, rng)
     save_json("construction", out)
     return out
 
@@ -216,7 +254,11 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--correlated", action="store_true",
                     help="run only the correlated-pair scenario")
+    ap.add_argument("--trace", action="store_true",
+                    help="export a validated build-timeline trace artifact "
+                         "to benchmarks/results/construction_trace.json")
     args = ap.parse_args()
     rows = []
-    run(rows, quick=args.quick, correlated_only=args.correlated)
+    run(rows, quick=args.quick, correlated_only=args.correlated,
+        trace=args.trace)
     print("\n".join(rows))

@@ -28,7 +28,12 @@ a multi-tenant query server:
     stale results;
   * **Metrics** — per-table p50/p99 latency, throughput, cache hit rates,
     GROUP BY expansion counters, admission queue/wait/drain/shed
-    telemetry.
+    telemetry;
+  * **tracing** (docs/observability.md) — the demo runs with tracing on:
+    each query gets an EXPLAIN stage breakdown (printed for one below)
+    and the span ring is exported to ``trace.json`` — open it at
+    https://ui.perfetto.dev (or chrome://tracing) to see the admission /
+    worker / per-query swimlanes.
 
 Run:
 
@@ -60,7 +65,7 @@ def main():
     # Auto mode: fused Pallas launches on TPU; per-query NumPy on CPU (where
     # JAX dispatch is the overhead, not the savings — batched_fraction will
     # read 0.0 here). Pass mode="ref" to watch the fused path off-TPU.
-    srv = AQPServer()
+    srv = AQPServer(trace_enabled=True)
 
     print("== registering tables ==")
     for name in ("power", "flights"):
@@ -82,6 +87,16 @@ def main():
     for sql, res in zip(wave, srv.query_batch(wave)):
         est, lo, hi = res.as_tuple()
         print(f"  {sql}\n    -> {est:,.1f}  [{lo:,.1f}, {hi:,.1f}]")
+
+    print("\n== EXPLAIN: where one traced query's wall-clock went ==")
+    res = srv.query("SELECT AVG(arr_delay) FROM flights WHERE distance > 650")
+    exp = res.explain
+    for stage in ("plan", "admit", "queue", "assemble", "execute", "resolve"):
+        print(f"  {stage:>9}: {exp[f'{stage}_ms']:8.3f} ms")
+    print(f"  {'total':>9}: {exp['total_ms']:8.3f} ms  "
+          f"(kernel share {exp['kernel_share_ms']:.3f} ms, "
+          f"plan_cache_hit={exp['plan_cache_hit']}, "
+          f"batched={exp['batched']}, wave={exp['wave_size']})")
 
     print("\n== GROUP BY rides the batched path (per-category leaf plans) ==")
     res = srv.query("SELECT AVG(arr_delay) FROM flights "
@@ -141,6 +156,14 @@ def main():
 
     print("\n== per-table telemetry ==")
     print(json.dumps(srv.stats()["tables"], indent=2, default=float))
+
+    print("\n== trace export ==")
+    path = srv.export_trace("trace.json")
+    tr = srv.stats()["tracing"]
+    print(f"  {tr['spans_recorded']} spans ({tr['spans_dropped']} dropped) "
+          f"-> {path}")
+    print("  open it at https://ui.perfetto.dev to see the admission/worker/"
+          "per-query swimlanes")
 
 
 if __name__ == "__main__":

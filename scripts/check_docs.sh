@@ -79,9 +79,11 @@ serving_knobs = ["mode", "plan_cache_size", "result_cache_size",
                  "max_result_bytes", "max_group", "min_group",
                  "max_wait_ms", "max_batch", "max_queue_depth",
                  "shed_policy", "retry_timeout_s", "single_lock"]
+obs_knobs = ["trace_enabled", "trace_buffer", "slow_query_ms"]
 docs = {p: p.read_text() for p in sorted(ROOT.glob("docs/*.md"))}
 for knob, home in ([(k, "construction") for k in build_knobs]
-                   + [(k, "serving") for k in serving_knobs]):
+                   + [(k, "serving") for k in serving_knobs]
+                   + [(k, "observability") for k in obs_knobs]):
     pat = re.compile(rf"`{re.escape(knob)}`")
     hits = [p.name for p, text in docs.items() if pat.search(text)]
     if hits != [f"{home}.md"]:
@@ -94,5 +96,5 @@ if errors:
         print(f"  {err}", file=sys.stderr)
     sys.exit(1)
 print(f"check_docs: OK ({len(md_files)} md files, "
-      f"{len(build_knobs) + len(serving_knobs)} knobs)")
+      f"{len(build_knobs) + len(serving_knobs) + len(obs_knobs)} knobs)")
 EOF

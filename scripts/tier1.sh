@@ -3,10 +3,13 @@
 # @slow tests (small-N stress variants stay in; the full-N stress suite
 # runs behind --stress with a wall-clock budget).
 #
-#   scripts/tier1.sh            # -m "not slow and not stress", fail-fast
-#   scripts/tier1.sh -k serving # extra pytest args pass through
-#   scripts/tier1.sh --stress   # full-N concurrency stress suite only,
-#                               # bounded by STRESS_BUDGET_S (default 600s)
+#   scripts/tier1.sh               # -m "not slow and not stress", fail-fast
+#   scripts/tier1.sh -k serving    # extra pytest args pass through
+#   scripts/tier1.sh --stress      # full-N concurrency stress suite only,
+#                                  # bounded by STRESS_BUDGET_S (default 600s)
+#   scripts/tier1.sh --trace-smoke # observability smoke: tiny traced
+#                                  # build+serve, trace_event schema
+#                                  # validation, overhead budget (< 5%)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 if [[ "${1:-}" == "--stress" ]]; then
@@ -14,6 +17,13 @@ if [[ "${1:-}" == "--stress" ]]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         timeout "${STRESS_BUDGET_S:-600}" \
         python -m pytest -q -m "stress" "$@"
+    exit $?
+fi
+if [[ "${1:-}" == "--trace-smoke" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        timeout "${TRACE_SMOKE_BUDGET_S:-300}" \
+        python scripts/trace_smoke.py "$@"
     exit $?
 fi
 scripts/check_docs.sh

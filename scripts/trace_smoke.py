@@ -1,0 +1,171 @@
+"""Tier-1 trace smoke lane (``scripts/tier1.sh --trace-smoke``).
+
+Tiny end-to-end check of the PR-6 observability surface:
+
+  1. build one small synopsis with the always-on build timeline and serve a
+     small workload through a *traced* ``AQPServer``;
+  2. export both the serving span ring and the construction timeline to
+     trace_event JSON, JSON-round-trip them, and validate against the
+     schema checker (``repro.obs.export.validate_trace_events``);
+  3. replay the same workload through traced and untraced servers in
+     back-to-back chunk pairs (order alternating, median of per-pair
+     ratios — robust to the ±20% drift of shared CI boxes) and assert
+     the traced overhead stays under ``TRACE_SMOKE_MAX_OVERHEAD_PCT``
+     (default 5%);
+  4. sanity-check one EXPLAIN breakdown: stages tile submit->resolve, and
+     the accounted total covers the observed wall-clock.
+
+Writes nothing outside a temp directory; exits non-zero on any failure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.aqp.engine import AQPFramework
+from repro.core.types import BuildParams
+from repro.obs.export import (timeline_to_events, validate_trace_events,
+                              write_trace)
+from repro.serve.aqp import AQPServer
+
+MAX_OVERHEAD_PCT = float(os.environ.get("TRACE_SMOKE_MAX_OVERHEAD_PCT", "5"))
+
+
+def _framework():
+    rng = np.random.default_rng(11)
+    n = 8_000
+    table = {
+        "a": rng.integers(0, 400, n).astype(float),
+        "b": np.abs(rng.normal(100, 30, n)).round(),
+        "c": rng.integers(0, 40, n).astype(float),
+        "g": np.array([f"g{i}" for i in rng.integers(0, 10, n)]),
+    }
+    params = BuildParams(n_samples=4_000, seed=1)
+    return AQPFramework(params=params, use_compression=False).ingest(table)
+
+
+def _workload():
+    """All-distinct queries so every one executes (a result-cache hit's
+    wall-clock is smaller than a single span, which would make a relative
+    budget meaningless), with GROUP BY mixed in so per-query work is
+    representative of serving traffic (leaf expansion multiplies the real
+    work per query; the tracing cost stays per-query)."""
+    sqls = []
+    for thr in range(40, 136, 2):
+        sqls.append(f"SELECT AVG(b) FROM t WHERE a > {thr * 2} GROUP BY g")
+        sqls.append(f"SELECT COUNT(a) FROM t WHERE b > {thr} AND c < 25")
+    return sqls
+
+
+def _make_server(fw, trace_enabled: bool) -> AQPServer:
+    srv = AQPServer(mode=None, trace_enabled=trace_enabled)
+    srv.register("t", fw)
+    return srv
+
+
+def _chunk_ms(srv, chunk) -> float:
+    t0 = time.perf_counter()
+    srv.query_batch(chunk)
+    return (time.perf_counter() - t0) / len(chunk) * 1e3
+
+
+def _overhead_pct(fw, sqls, reps: int = 3) -> float:
+    """Traced-vs-untraced overhead on the batched serving path.
+
+    Shared CI boxes drift by +/- 20% at the 100ms timescale, so pass-level
+    A/B medians cannot resolve a 5% effect. Instead each ~10ms chunk of
+    the workload is timed back-to-back on an untraced and a traced server
+    (order alternating chunk to chunk, so drift biases successive pairs in
+    opposite directions) and the reported overhead is the median of the
+    per-chunk traced/untraced ratios — drift cancels within a pair, and a
+    real regression shifts every pair.
+    """
+    chunks = [sqls[lo:lo + 8] for lo in range(0, len(sqls), 8)]
+    ratios = []
+    for _ in range(reps):
+        off_srv, on_srv = _make_server(fw, False), _make_server(fw, True)
+        for i, chunk in enumerate(chunks):
+            if i % 2 == 0:
+                off = _chunk_ms(off_srv, chunk)
+                on = _chunk_ms(on_srv, chunk)
+            else:
+                on = _chunk_ms(on_srv, chunk)
+                off = _chunk_ms(off_srv, chunk)
+            ratios.append(on / off)
+        off_srv.close()
+        on_srv.close()
+    return (float(np.median(ratios)) - 1.0) * 100.0
+
+
+def main() -> int:
+    failures = []
+    fw = _framework()
+    sqls = _workload()
+
+    # --- serve traced once: explain sanity + span export -------------------
+    srv = AQPServer(mode=None, trace_enabled=True)
+    srv.register("t", fw)
+    t0 = time.perf_counter()
+    res = srv.query(sqls[0])
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    exp = res.explain
+    if exp is None:
+        failures.append("traced query returned no explain")
+    else:
+        stage_sum = sum(exp[k] for k in ("plan_ms", "admit_ms", "queue_ms",
+                                         "assemble_ms", "execute_ms",
+                                         "resolve_ms"))
+        if abs(stage_sum - exp["total_ms"]) > 1e-6:
+            failures.append(f"explain stages do not tile: {stage_sum} vs "
+                            f"{exp['total_ms']}")
+        if exp["total_ms"] > wall_ms:
+            failures.append(f"explain total {exp['total_ms']:.3f} ms exceeds "
+                            f"observed wall {wall_ms:.3f} ms")
+    srv.query_batch(sqls[:16])
+    events = srv.trace_events()
+    srv.close()
+
+    build_events = timeline_to_events(fw.synopsis.build_stats["timeline"])
+    with tempfile.TemporaryDirectory() as tmp:
+        for label, evs in (("serving", events), ("construction", build_events)):
+            if not evs:
+                failures.append(f"{label}: no trace events recorded")
+                continue
+            path = write_trace(os.path.join(tmp, f"{label}.json"), evs)
+            with open(path) as f:
+                parsed = json.load(f)
+            problems = validate_trace_events(parsed)
+            if problems:
+                failures.append(f"{label}: invalid trace_event JSON: "
+                                + "; ".join(problems[:5]))
+            else:
+                print(f"trace_smoke: {label} trace OK ({len(parsed)} events)")
+
+    # --- traced vs untraced overhead ---------------------------------------
+    warm = _make_server(fw, False)
+    for lo in range(0, len(sqls), 16):            # compile/cache warm-up
+        warm.query_batch(sqls[lo:lo + 16])
+    warm.close()
+    overhead_pct = _overhead_pct(fw, sqls)
+    print(f"trace_smoke: traced-vs-untraced overhead {overhead_pct:+.1f}% "
+          f"(median of paired chunk ratios, budget {MAX_OVERHEAD_PCT:.0f}%)")
+    if overhead_pct >= MAX_OVERHEAD_PCT:
+        failures.append(f"tracing overhead {overhead_pct:.1f}% >= "
+                        f"{MAX_OVERHEAD_PCT:.1f}% budget")
+
+    if failures:
+        print("trace_smoke: FAIL", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("trace_smoke: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import itertools
 import time
+import types
 
 import numpy as np
 
@@ -45,16 +46,18 @@ class AQPFramework:
         self.preprocessed = None
         self.synopsis = None
         self._raw_batches = []
-        self.timings = {}
         # Serving-layer integration: the queryable state is the ATOMICALLY
-        # published (engine, epoch) pair — one tuple assignment whenever it
-        # changes (ingest / append_rows / rebuild), so a reader snapshotting
-        # ``published`` can never observe an engine with the wrong epoch
-        # (the serving scheduler's per-item epoch revalidation and the
-        # plan-time epoch capture both rely on this). Plan/result caches
-        # keyed on the epoch can never serve stale answers; callbacks let a
-        # catalog purge eagerly.
-        self._published: tuple = (None, 0)
+        # published (engine, epoch, timings) triple — one tuple assignment
+        # whenever it changes (ingest / append_rows / rebuild), so a reader
+        # snapshotting ``published`` can never observe an engine with the
+        # wrong epoch (the serving scheduler's per-item epoch revalidation
+        # and the plan-time epoch capture both rely on this). ``timings``
+        # rides along as an immutable MappingProxyType: a server thread
+        # snapshotting build telemetry mid-``rebuild()`` sees either the
+        # whole old dict or the whole new one, never a half-built mutation.
+        # Plan/result caches keyed on the epoch can never serve stale
+        # answers; callbacks let a catalog purge eagerly.
+        self._published: tuple = (None, 0, types.MappingProxyType({}))
         self._invalidate_cbs = []
 
     # ------------------------------------------------------- staleness hooks
@@ -73,7 +76,18 @@ class AQPFramework:
     def published(self) -> tuple:
         """Atomic (engine, epoch) snapshot — the pair was published in one
         assignment, so the engine is exactly the one built at that epoch."""
-        return self._published
+        return self._published[:2]
+
+    @property
+    def timings(self) -> "types.MappingProxyType":
+        """Read-only build-timing telemetry published with the engine.
+
+        Immutable by construction: ``ingest``/``rebuild`` assemble a fresh
+        dict and publish it in the same tuple assignment as the engine, so
+        concurrent readers never see partial updates and the keys always
+        describe the *published* synopsis, not one mid-build.
+        """
+        return self._published[2]
 
     @property
     def is_stale(self) -> bool:
@@ -91,10 +105,15 @@ class AQPFramework:
         except ValueError:
             pass
 
-    def _publish(self, engine):
-        """Atomically publish ``(engine, fresh epoch)`` and fire the
-        invalidation callbacks (``engine=None`` marks the table stale)."""
-        self._published = (engine, next(AQPFramework._epoch_seq))
+    def _publish(self, engine, timings: dict | None = None):
+        """Atomically publish ``(engine, fresh epoch, timings)`` and fire
+        the invalidation callbacks (``engine=None`` marks the table stale;
+        ``timings=None`` carries the previous telemetry forward)."""
+        if timings is None:
+            frozen = self._published[2]
+        else:
+            frozen = types.MappingProxyType(dict(timings))
+        self._published = (engine, next(AQPFramework._epoch_seq), frozen)
         for cb in list(self._invalidate_cbs):
             cb(self)
 
@@ -114,15 +133,17 @@ class AQPFramework:
             seed_edges=seed_edges)
         t3 = time.perf_counter()
         engine = QueryEngine(self.synopsis, fastpath=self.fastpath)
-        self.timings = {"preprocess_s": t1 - t0, "compress_s": t2 - t1,
-                        "build_synopsis_s": t3 - t2}
         # Pair-phase telemetry from the (batched) builder: rebuild() runs
         # through here too, so serving-cache invalidation pauses
-        # (append_rows -> rebuild) are dominated by this number.
+        # (append_rows -> rebuild) are dominated by build_pairs_s.
         stats = self.synopsis.build_stats
-        self.timings["build_pairs_s"] = stats.get("pair_phase_s", 0.0)
-        self.timings["build_pair_mode"] = stats.get("mode", "")
-        self._publish(engine)
+        self._publish(engine, {
+            "preprocess_s": t1 - t0, "compress_s": t2 - t1,
+            "build_synopsis_s": t3 - t2,
+            "build_pairs_s": stats.get("pair_phase_s", 0.0),
+            "build_pair_mode": stats.get("mode", ""),
+            "build_phase_s": dict(stats.get("phase_s", {})),
+        })
         return self
 
     def append_rows(self, table: dict):

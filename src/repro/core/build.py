@@ -48,6 +48,7 @@ import numpy as np
 from repro.core import chi2 as chi2lib
 from repro.core import refine
 from repro.core.types import BuildParams, ColumnInfo, Hist1D, PairHist, PairwiseHist
+from repro.obs.timeline import BuildTimeline
 
 def _prep_columns(sample: np.ndarray):
     """Sort all columns at once with NaN (missing) pushed to +inf at the tail.
@@ -252,10 +253,12 @@ def _cap_ladder(need: int, k2_cap: int, k2_start: int) -> list[int]:
 
 
 def build_pairs_batched(sample: np.ndarray, hists: list, params,
-                        crit2, m_pts: int, stats: dict | None = None) -> dict:
+                        crit2, m_pts: int, stats: dict | None = None,
+                        timeline: BuildTimeline | None = None) -> dict:
     """Pair-batched 2-D construction: chunked (P, N) launches, one grouped
     device->host transfer per chunk. Returns {(a, b): PairHist} (no folds);
-    records per-chunk (size, capacity) launches into ``stats``.
+    records per-chunk (size, capacity) launches into ``stats`` and, when a
+    ``timeline`` is passed, one ``batched_launch`` interval per launch.
 
     Each chunk refines at the smallest capacity rung that fits its initial
     grids; if any pair's capacity guard binds, the whole chunk re-runs one
@@ -292,6 +295,7 @@ def build_pairs_batched(sample: np.ndarray, hists: list, params,
                        _presort_pairs_host(x, y, valid))
         need = int(max(kx0.max(), ky0.max()))
         for cap in _cap_ladder(need, K2, params.k2_start):
+            t_launch = time.perf_counter()
             ex0 = np.full((size, cap + 1), np.inf, np.float64)
             ey0 = np.full((size, cap + 1), np.inf, np.float64)
             ex0[:, :2] = 0.0
@@ -307,6 +311,9 @@ def build_pairs_batched(sample: np.ndarray, hists: list, params,
                 use_pallas=params.use_pallas)
             host = jax.device_get(out)  # ONE grouped transfer for the chunk
             launches.append((size, cap))
+            if timeline is not None:
+                timeline.add("batched_launch", t_launch, time.perf_counter(),
+                             cap=cap, size=size, pairs=len(part))
             capped = host[4]
             if cap >= K2 or not capped[: len(part)].any():
                 break
@@ -325,7 +332,8 @@ _COMPACT_QUEUE = 4
 
 
 def build_pairs_compact(sample: np.ndarray, hists: list, params,
-                        crit2, m_pts: int, stats: dict | None = None) -> dict:
+                        crit2, m_pts: int, stats: dict | None = None,
+                        timeline: BuildTimeline | None = None) -> dict:
     """Convergence-compacting 2-D construction (the default batched path).
 
     Pairs feed through ``refine.refine_2d_compact`` in groups of up to
@@ -344,7 +352,11 @@ def build_pairs_compact(sample: np.ndarray, hists: list, params,
     whatever the slot count, queue order, drain timing or ``occupancy_min``
     re-bucketing (asserted in tests/test_build_compact.py). Returns
     {(a, b): PairHist} without fold maps; records launch shapes and
-    occupancy telemetry into ``stats``.
+    occupancy telemetry into ``stats``. When a ``timeline`` is passed,
+    every device relaunch becomes a ``compact_launch`` interval carrying
+    its drained/escalated/resumed counters plus ``rung_escalation`` and
+    ``occupancy_rebucket`` markers — the per-round schedule ledger as an
+    event stream instead of summed scalars.
     """
     K2 = params.k2_cap
     n_s, d = sample.shape
@@ -357,7 +369,7 @@ def build_pairs_compact(sample: np.ndarray, hists: list, params,
     occupancy = float(params.occupancy_min)
     launches = []
     comp = {"loop_rounds": 0, "pair_rounds": 0, "slot_rounds": 0,
-            "relaunches": 0, "escalated_pairs": 0}
+            "relaunches": 0, "escalated_pairs": 0, "occupancy_hist": {}}
     raw_pairs = {}
 
     for start in range(0, len(keys), group_cap):
@@ -423,6 +435,7 @@ def build_pairs_compact(sample: np.ndarray, hists: list, params,
                     else:
                         (ex0[p], ey0[p], kx0[p], ky0[p], rounds0[p],
                          capped0[p]) = st
+                t_launch = time.perf_counter()
                 out = refine.refine_2d_compact(
                     *data, jnp.asarray(ex0), jnp.asarray(ey0),
                     jnp.asarray(kx0), jnp.asarray(ky0),
@@ -433,14 +446,17 @@ def build_pairs_compact(sample: np.ndarray, hists: list, params,
                     drain_capped=drain_capped, use_pallas=params.use_pallas)
                 host = jax.device_get(out)  # ONE grouped transfer
                 (oex, oey, okx, oky, ocap, _ornd, odone, spair, sact,
-                 sex, sey, skx, sky, scap, srnd, loop_rounds,
+                 sex, sey, skx, sky, scap, srnd, occ_hist, loop_rounds,
                  act_rounds) = host
                 launches.append((s_eff, cap))
                 comp["loop_rounds"] += int(loop_rounds)
                 comp["pair_rounds"] += int(act_rounds)
                 comp["slot_rounds"] += int(loop_rounds) * s_eff
                 comp["relaunches"] += 0 if first_launch else 1
-                first_launch = False
+                for n_act, n_r in enumerate(occ_hist):
+                    if n_r:
+                        comp["occupancy_hist"][n_act] = \
+                            comp["occupancy_hist"].get(n_act, 0) + int(n_r)
                 escalated = 0
                 for p, (gid, _) in enumerate(entries):
                     if not odone[p]:
@@ -454,11 +470,30 @@ def build_pairs_compact(sample: np.ndarray, hists: list, params,
                         final[gid] = (cap, oex[p], oey[p], int(okx[p]),
                                       int(oky[p]))
                 comp["escalated_pairs"] += escalated
+                n_before = len(entries)
                 entries = [
                     (entries[int(spair[s_i])][0],
                      (sex[s_i], sey[s_i], int(skx[s_i]), int(sky[s_i]),
                       int(srnd[s_i]), bool(scap[s_i])))
                     for s_i in range(s_eff) if sact[s_i]]
+                if timeline is not None:
+                    timeline.add(
+                        "compact_launch", t_launch, time.perf_counter(),
+                        cap=cap, slots=s_eff, pairs=n_before,
+                        loop_rounds=int(loop_rounds),
+                        pair_rounds=int(act_rounds),
+                        drained=n_before - len(entries),
+                        escalated=escalated, resumed=len(entries),
+                        relaunch=not first_launch)
+                    if escalated:
+                        timeline.event("rung_escalation", from_cap=cap,
+                                       to_cap=ladder[min(rung_i + 1,
+                                                         len(ladder) - 1)],
+                                       pairs=escalated)
+                    if entries:
+                        timeline.event("occupancy_rebucket",
+                                       resumed=len(entries), cap=cap)
+                first_launch = False
 
         # Metadata per rung (pairs that finished at the same capacity share
         # a bucketed launch; trim is capacity-independent).
@@ -520,91 +555,101 @@ def build_pairwise_hist(
     d = data.shape[1]
     if len(columns) != d:
         raise ValueError("columns metadata must match data width")
+    # The timeline is always-on: construction is host-orchestrated with a
+    # handful of device launches, so recording costs a few dict appends
+    # against seconds of build — not worth a knob.
+    timeline = BuildTimeline()
 
     # --- 1. sample ---------------------------------------------------------
-    n_s = min(params.n_samples, data.shape[0])
-    if n_s < data.shape[0]:
-        rng = np.random.default_rng(params.seed)
-        rows = rng.choice(data.shape[0], size=n_s, replace=False)
-        sample = data[rows]
-    else:
-        sample = data
-    m_pts = max(2, int(round(params.m_frac * n_s)))
-    n_take = max(2, math.ceil(n_s / m_pts))
-    s_max = max(params.s1_max, params.s2_max)
-    crit_np = chi2lib.build_crit_table(params.alpha, s_max)
-    crit = jnp.asarray(crit_np)
-    crit1 = crit[: params.s1_max + 1]
-    crit2 = crit[: params.s2_max + 1]
+    with timeline.phase("sample", n_rows=int(data.shape[0]), d=d):
+        n_s = min(params.n_samples, data.shape[0])
+        if n_s < data.shape[0]:
+            rng = np.random.default_rng(params.seed)
+            rows = rng.choice(data.shape[0], size=n_s, replace=False)
+            sample = data[rows]
+        else:
+            sample = data
+        m_pts = max(2, int(round(params.m_frac * n_s)))
+        n_take = max(2, math.ceil(n_s / m_pts))
+        s_max = max(params.s1_max, params.s2_max)
+        crit_np = chi2lib.build_crit_table(params.alpha, s_max)
+        crit = jnp.asarray(crit_np)
+        crit1 = crit[: params.s1_max + 1]
+        crit2 = crit[: params.s2_max + 1]
 
     # --- 2. one-dimensional histograms (vmapped across columns) ------------
     K1 = params.k1_cap
-    xs_all, up_all, nv_all, vmin_all, vmax_all = _prep_columns(sample)
-    columns = [dataclasses.replace(c, n_null=int(n_s - nv_all[i]))
-               for i, c in enumerate(columns)]
-    e0_all = np.empty((d, K1 + 1), np.float64)
-    n0_all = np.empty((d,), np.int32)
-    mu_all = np.array([c.mu for c in columns], np.float64)
-    for i in range(d):
-        seed = None if seed_edges is None else seed_edges[i]
-        if columns[i].kind == "categorical" and \
-                0 < len(columns[i].categories) <= max(n_take, 4):
-            # One bin per category: categorical codes with near-equal
-            # frequencies look "uniform" to the chi-squared test and would
-            # otherwise never split, destroying groupwise discrimination.
-            # (GD-bases seeding achieves the same: each category is a base.)
-            # Half-integer edges isolate every code incl. the last two.
-            seed = np.arange(len(columns[i].categories) - 1) + 0.5
-        e0_all[i], n0_all[i] = _init_edges(vmin_all[i], vmax_all[i], K1,
-                                           n_take, seed)
+    with timeline.phase("refine_1d", d=d):
+        xs_all, up_all, nv_all, vmin_all, vmax_all = _prep_columns(sample)
+        columns = [dataclasses.replace(c, n_null=int(n_s - nv_all[i]))
+                   for i, c in enumerate(columns)]
+        e0_all = np.empty((d, K1 + 1), np.float64)
+        n0_all = np.empty((d,), np.int32)
+        mu_all = np.array([c.mu for c in columns], np.float64)
+        for i in range(d):
+            seed = None if seed_edges is None else seed_edges[i]
+            if columns[i].kind == "categorical" and \
+                    0 < len(columns[i].categories) <= max(n_take, 4):
+                # One bin per category: categorical codes with near-equal
+                # frequencies look "uniform" to the chi-squared test and would
+                # otherwise never split, destroying groupwise discrimination.
+                # (GD-bases seeding achieves the same: each category is a
+                # base.) Half-integer edges isolate every code incl. the
+                # last two.
+                seed = np.arange(len(columns[i].categories) - 1) + 0.5
+            e0_all[i], n0_all[i] = _init_edges(vmin_all[i], vmax_all[i], K1,
+                                               n_take, seed)
 
-    refine_v = jax.vmap(
-        lambda xs, up, e0, n0: refine.refine_1d(
-            xs, up, e0, n0, jnp.float64(m_pts), crit1,
-            s_max=params.s1_max, max_rounds=params.max_rounds_1d))
-    edges_j, k_j = refine_v(jnp.asarray(xs_all), jnp.asarray(up_all),
-                            jnp.asarray(e0_all), jnp.asarray(n0_all))
+        refine_v = jax.vmap(
+            lambda xs, up, e0, n0: refine.refine_1d(
+                xs, up, e0, n0, jnp.float64(m_pts), crit1,
+                s_max=params.s1_max, max_rounds=params.max_rounds_1d))
+        edges_j, k_j = refine_v(jnp.asarray(xs_all), jnp.asarray(up_all),
+                                jnp.asarray(e0_all), jnp.asarray(n0_all))
 
-    meta_v = jax.vmap(
-        lambda xs, up, e, k, mu: refine.metadata_1d(
-            xs, up, e, k, jnp.float64(m_pts), crit1, mu,
-            s_max=params.s1_max))
-    h_j, u_j, vmin_j, vmax_j, c_j, cm_j, cp_j = meta_v(
-        jnp.asarray(xs_all), jnp.asarray(up_all), edges_j, k_j,
-        jnp.asarray(mu_all))
+        meta_v = jax.vmap(
+            lambda xs, up, e, k, mu: refine.metadata_1d(
+                xs, up, e, k, jnp.float64(m_pts), crit1, mu,
+                s_max=params.s1_max))
+        h_j, u_j, vmin_j, vmax_j, c_j, cm_j, cp_j = meta_v(
+            jnp.asarray(xs_all), jnp.asarray(up_all), edges_j, k_j,
+            jnp.asarray(mu_all))
 
-    edges_np = np.asarray(edges_j)
-    k_np = np.asarray(k_j)
-    hists: list[Hist1D] = []
-    for i in range(d):
-        k = int(k_np[i])
-        hists.append(Hist1D(
-            edges=edges_np[i, : k + 1].copy(),
-            k=np.int32(k),
-            h=np.asarray(h_j)[i, :k].copy(),
-            u=np.asarray(u_j)[i, :k].copy(),
-            vmin=np.asarray(vmin_j)[i, :k].copy(),
-            vmax=np.asarray(vmax_j)[i, :k].copy(),
-            c=np.asarray(c_j)[i, :k].copy(),
-            cminus=np.asarray(cm_j)[i, :k].copy(),
-            cplus=np.asarray(cp_j)[i, :k].copy(),
-        ))
+        edges_np = np.asarray(edges_j)
+        k_np = np.asarray(k_j)
+        hists: list[Hist1D] = []
+        for i in range(d):
+            k = int(k_np[i])
+            hists.append(Hist1D(
+                edges=edges_np[i, : k + 1].copy(),
+                k=np.int32(k),
+                h=np.asarray(h_j)[i, :k].copy(),
+                u=np.asarray(u_j)[i, :k].copy(),
+                vmin=np.asarray(vmin_j)[i, :k].copy(),
+                vmax=np.asarray(vmax_j)[i, :k].copy(),
+                c=np.asarray(c_j)[i, :k].copy(),
+                cminus=np.asarray(cm_j)[i, :k].copy(),
+                cplus=np.asarray(cp_j)[i, :k].copy(),
+            ))
 
     # --- 3. pair histograms (batched across pairs) -------------------------
     t_pairs = time.perf_counter()
     build_stats: dict = {}
-    if params.pair_batched and params.compact_drain:
-        mode = "compact"
-        raw_pairs = build_pairs_compact(sample, hists, params, crit2, m_pts,
-                                        stats=build_stats)
-    elif params.pair_batched:
-        mode = "batched"
-        raw_pairs = build_pairs_batched(sample, hists, params, crit2, m_pts,
-                                        stats=build_stats)
-    else:
-        mode = "sequential"
-        raw_pairs = build_pairs_sequential(sample, hists, params, crit2,
-                                           m_pts)
+    with timeline.phase("pair_phase"):
+        if params.pair_batched and params.compact_drain:
+            mode = "compact"
+            raw_pairs = build_pairs_compact(sample, hists, params, crit2,
+                                            m_pts, stats=build_stats,
+                                            timeline=timeline)
+        elif params.pair_batched:
+            mode = "batched"
+            raw_pairs = build_pairs_batched(sample, hists, params, crit2,
+                                            m_pts, stats=build_stats,
+                                            timeline=timeline)
+        else:
+            mode = "sequential"
+            raw_pairs = build_pairs_sequential(sample, hists, params, crit2,
+                                               m_pts)
     build_stats.update({
         "mode": mode,
         "n_pairs": len(raw_pairs),
@@ -619,6 +664,7 @@ def build_pairwise_hist(
     # the 2-D refinement (this is what the paper's per-dimension 2-D bin
     # metadata, Fig. 4, buys). Fold maps: 1-D bin -> containing pair row.
     pairs: dict[tuple[int, int], PairHist] = {}
+    t_regrid = time.perf_counter()
     for i in range(d):
         union = [hists[i].edges]
         for (a, b), pr in raw_pairs.items():
@@ -647,10 +693,16 @@ def build_pairwise_hist(
             cminus=np.asarray(cm_u)[:k_u].copy(),
             cplus=np.asarray(cp_u)[:k_u].copy())
 
-    for (a, b), pr in raw_pairs.items():
-        pairs[(a, b)] = pr._replace(
-            fold_x=fold_to_rows(hists[a].edges, pr.ex),
-            fold_y=fold_to_rows(hists[b].edges, pr.ey))
+    timeline.add("union_regrid", t_regrid, time.perf_counter(), d=d)
+
+    with timeline.phase("folds", n_pairs=len(raw_pairs)):
+        for (a, b), pr in raw_pairs.items():
+            pairs[(a, b)] = pr._replace(
+                fold_x=fold_to_rows(hists[a].edges, pr.ex),
+                fold_y=fold_to_rows(hists[b].edges, pr.ey))
+
+    build_stats["timeline"] = timeline.events
+    build_stats["phase_s"] = timeline.summary()
 
     return PairwiseHist(
         params=params,

@@ -30,6 +30,11 @@ class QueryResult:
     upper: float | None
     groups: dict | None = None       # GROUP BY: value -> (est, lo, hi)
     latency_s: float = 0.0
+    # Opt-in EXPLAIN breakdown (server-side tracing): per-stage ms tiling
+    # the submit->resolve wall clock, plus cache/wave flags. None unless
+    # the serving layer traced this query; cached results stay explain-free
+    # (the breakdown describes ONE submission, not the shared value).
+    explain: dict | None = None
 
     # Overridden by AdmissionRejected; lets clients branch on res.rejected
     # without an isinstance import.

@@ -622,10 +622,13 @@ def refine_2d_compact(xo1, yo1, vo1, new1, xo2, yo2, vo2, new2,
 
     Returns ``(out_ex, out_ey, out_kx, out_ky, out_capped, out_rounds,
     out_done, slot_pair, slot_active, sex, sey, skx, sky, scapped, srounds,
-    loop_rounds, active_rounds)`` — per-pair outputs (valid where
+    occ_hist, loop_rounds, active_rounds)`` — per-pair outputs (valid where
     ``out_done``), the live slot state for resumption, and occupancy
     telemetry (``active_rounds`` counts pair-rounds actually refined;
-    ``loop_rounds * n_slots`` is the slot-rounds paid).
+    ``loop_rounds * n_slots`` is the slot-rounds paid; ``occ_hist`` is an
+    ``(n_slots + 1,)`` histogram of how many loop rounds ran with each
+    possible active-slot count — the per-round occupancy distribution at
+    fixed memory, feeding the build timeline).
     """
     P = xo1.shape[0]
     S = n_slots
@@ -660,11 +663,12 @@ def refine_2d_compact(xo1, yo1, vo1, new1, xo2, yo2, vo2, new2,
     state = (slot_pair, active, sex, sey, skx, sky, scap, srnd,
              jnp.minimum(jnp.int32(S), n_pending.astype(jnp.int32)),
              out_ex, out_ey, out_kx, out_ky, out_capped, out_rounds,
-             out_done, jnp.int32(0), jnp.int32(0))
+             out_done, jnp.zeros(S + 1, jnp.int32), jnp.int32(0),
+             jnp.int32(0))
 
     def cond(st):
         (_, active, _, _, _, _, _, _, next_ptr,
-         _, _, _, _, _, _, _, loop_rounds, _) = st
+         _, _, _, _, _, _, _, _, loop_rounds, _) = st
         n_act = jnp.sum(active, dtype=jnp.int32)
         exhausted = next_ptr >= n_pending
         return jnp.any(active) & ((loop_rounds == 0)
@@ -673,7 +677,7 @@ def refine_2d_compact(xo1, yo1, vo1, new1, xo2, yo2, vo2, new2,
     def body(st):
         (slot_pair, active, sex, sey, skx, sky, scap, srnd, next_ptr,
          out_ex, out_ey, out_kx, out_ky, out_capped, out_rounds,
-         out_done, loop_rounds, active_rounds) = st
+         out_done, occ_hist, loop_rounds, active_rounds) = st
         nex, ney, nkx, nky, n_split, cap_r = _round_2d_batch(
             xo1[slot_pair], yo1[slot_pair], vo1[slot_pair], new1[slot_pair],
             xo2[slot_pair], yo2[slot_pair], vo2[slot_pair], new2[slot_pair],
@@ -714,17 +718,19 @@ def refine_2d_compact(xo1, yo1, vo1, new1, xo2, yo2, vo2, new2,
             (ky0.astype(jnp.int32), sky), (capped0, scap),
             (rounds0.astype(jnp.int32), srnd)])
         next_ptr = next_ptr + jnp.sum(take, dtype=jnp.int32)
+        n_am = jnp.sum(am, dtype=jnp.int32)
         return (slot_pair, active, sex, sey, skx, sky, scap, srnd, next_ptr,
                 out_ex, out_ey, out_kx, out_ky, out_capped, out_rounds,
-                out_done, loop_rounds + 1,
-                active_rounds + jnp.sum(am, dtype=jnp.int32))
+                out_done, occ_hist.at[n_am].add(1), loop_rounds + 1,
+                active_rounds + n_am)
 
     (slot_pair, active, sex, sey, skx, sky, scap, srnd, _next_ptr,
      out_ex, out_ey, out_kx, out_ky, out_capped, out_rounds, out_done,
-     loop_rounds, active_rounds) = jax.lax.while_loop(cond, body, state)
+     occ_hist, loop_rounds, active_rounds) = jax.lax.while_loop(
+         cond, body, state)
     return (out_ex, out_ey, out_kx, out_ky, out_capped, out_rounds, out_done,
             slot_pair, active, sex, sey, skx, sky, scap, srnd,
-            loop_rounds, active_rounds)
+            occ_hist, loop_rounds, active_rounds)
 
 
 @functools.partial(jax.jit, static_argnames=("k2", "use_pallas", "interpret"))

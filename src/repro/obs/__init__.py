@@ -1,0 +1,14 @@
+"""Observability: spans, per-query traces, build timelines, Perfetto export.
+
+The serving stack (``repro.serve.aqp``) threads a per-query ``QueryTrace``
+through submit -> admission -> wave -> resolution and records spans into a
+lock-free ring-buffer ``Tracer``; the construction stack records a
+``BuildTimeline`` of phases and per-launch compaction events into
+``PairwiseHist.build_stats``. Both sides export to Chrome/Perfetto
+``trace_event`` JSON via ``repro.obs.export`` (open the artifact at
+https://ui.perfetto.dev). Reference: docs/observability.md.
+"""
+from repro.obs.export import (spans_to_events, timeline_to_events,  # noqa: F401
+                              trace_json, validate_trace_events, write_trace)
+from repro.obs.timeline import BuildTimeline  # noqa: F401
+from repro.obs.trace import NOOP_SPAN, QueryTrace, Span, Tracer  # noqa: F401

@@ -5,16 +5,26 @@ Three layers:
   * ``TableMetrics`` — per-table query latencies (bounded reservoir with
     uniform replacement, so long-running servers report stable p50/p99
     without unbounded memory), batched/fallback/cache-hit counters, and
-    GROUP BY leaf-expansion counters. Counters are exact.
+    GROUP BY leaf-expansion counters. Counters are exact: recording and
+    snapshotting are serialized by a per-object lock, so concurrent
+    submitter/worker threads can never lose an increment or snapshot a
+    half-updated reservoir (asserted under contention in
+    tests/test_obs.py).
   * ``AdmissionMetrics`` — server-wide streaming-admission stats: queue
     depth at drain time, per-query admission wait (submit -> drain), and
     drain causes (``full`` / ``flush`` / ``timeout``).
+  * ``StageMetrics`` — trace-derived per-stage latency reservoirs (plan /
+    queue / execute / ...): ``Metrics.record_explain`` feeds each traced
+    query's EXPLAIN breakdown in, and the snapshot reports per-stage
+    p50/p99 so aggregate dashboards see where wall-clock goes without
+    reading raw traces.
   * ``Metrics`` — the container ``AQPServer`` owns; assembles the snapshot
     dict (see ``docs/serving.md`` for the field reference).
 """
 from __future__ import annotations
 
 import random
+import threading
 import time
 
 import numpy as np
@@ -57,6 +67,7 @@ class TableMetrics:
 
     def __init__(self, reservoir: int = 4096, seed: int = 0):
         self.reservoir = int(reservoir)
+        self._lock = threading.Lock()
         self._lat = _Reservoir(self.reservoir, seed)
         self.n_queries = 0          # executed (cache misses)
         self.n_batched = 0          # executed via the fused batched kernel
@@ -71,48 +82,58 @@ class TableMetrics:
     def record(self, latency_s: float, batched: bool):
         """One executed query: its latency share and whether it fused."""
         now = time.perf_counter()
-        self._t_first = self._t_first if self._t_first is not None else now
-        self._t_last = now
-        self.n_queries += 1
-        if batched:
-            self.n_batched += 1
-        else:
-            self.n_fallback += 1
-        self._lat.add(latency_s)
+        with self._lock:
+            self._t_first = self._t_first if self._t_first is not None else now
+            self._t_last = now
+            self.n_queries += 1
+            if batched:
+                self.n_batched += 1
+            else:
+                self.n_fallback += 1
+            self._lat.add(latency_s)
 
     def record_result_hit(self):
         """One query served from the result cache (no execution)."""
-        self.n_result_hits += 1
+        with self._lock:
+            self.n_result_hits += 1
 
     def record_group_expansion(self, n_executed: int, n_cached: int):
         """One GROUP BY query: leaves executed vs served from cache."""
-        self.n_group_queries += 1
-        self.n_leaves_executed += int(n_executed)
-        self.n_leaf_cache_hits += int(n_cached)
+        with self._lock:
+            self.n_group_queries += 1
+            self.n_leaves_executed += int(n_executed)
+            self.n_leaf_cache_hits += int(n_cached)
 
     def snapshot(self) -> dict:
         """Point-in-time dict of counters + p50/p99/qps (None when empty)."""
-        served = self.n_queries + self.n_result_hits
-        span = ((self._t_last - self._t_first)
-                if self._t_first is not None else 0.0)
-        p50, p99 = self._lat.percentiles_ms()
-        return {
-            "queries_served": served,
-            "queries_executed": self.n_queries,
-            "batched": self.n_batched,
-            "fallback": self.n_fallback,
-            "result_cache_hits": self.n_result_hits,
-            "batched_fraction": (self.n_batched / self.n_queries
-                                 if self.n_queries else 0.0),
-            "p50_ms": p50,
-            "p99_ms": p99,
-            "qps": (self.n_queries / span if span > 0 else None),
-            "group_by": {
-                "queries": self.n_group_queries,
-                "leaves_executed": self.n_leaves_executed,
-                "leaf_cache_hits": self.n_leaf_cache_hits,
-            },
-        }
+        with self._lock:
+            served = self.n_queries + self.n_result_hits
+            span = ((self._t_last - self._t_first)
+                    if self._t_first is not None else 0.0)
+            n_queries = self.n_queries
+            p50, p99 = self._lat.percentiles_ms()
+            snap = {
+                "queries_served": served,
+                "queries_executed": n_queries,
+                "batched": self.n_batched,
+                "fallback": self.n_fallback,
+                "result_cache_hits": self.n_result_hits,
+                "batched_fraction": (self.n_batched / n_queries
+                                     if n_queries else 0.0),
+                "p50_ms": p50,
+                "p99_ms": p99,
+                "group_by": {
+                    "queries": self.n_group_queries,
+                    "leaves_executed": self.n_leaves_executed,
+                    "leaf_cache_hits": self.n_leaf_cache_hits,
+                },
+            }
+        # qps window: once >= 1 query landed, span is clamped to a small
+        # epsilon so a single query (span == 0 between first and last)
+        # reports a finite rate instead of None.
+        snap["qps"] = (n_queries / max(span, 1e-9)
+                       if n_queries > 0 else None)
+        return snap
 
 
 class AdmissionMetrics:
@@ -120,6 +141,7 @@ class AdmissionMetrics:
     backpressure decisions (rejected / shed submissions)."""
 
     def __init__(self, reservoir: int = 4096):
+        self._lock = threading.Lock()
         self._wait = _Reservoir(reservoir, seed=1)
         self.n_drains = 0
         self.n_submitted = 0
@@ -133,7 +155,8 @@ class AdmissionMetrics:
 
     def record_submit(self):
         """One ``AQPServer.submit`` call (cache hits and dupes included)."""
-        self.n_submitted += 1
+        with self._lock:
+            self.n_submitted += 1
 
     def record_shed(self, reason: str, depth: int):
         """One backpressure decision: a submission rejected at the door
@@ -141,46 +164,83 @@ class AdmissionMetrics:
         Counted per *submission*, not per attached future. ``depth`` (the
         queue depth observed at decision time) feeds the high-water mark,
         NOT ``max_depth`` (which stays drain-time-only as documented)."""
-        if reason == "reject":
-            self.n_rejected += 1
-        else:
-            self.n_shed += 1
-        self.queue_high_water = max(self.queue_high_water, depth)
+        with self._lock:
+            if reason == "reject":
+                self.n_rejected += 1
+            else:
+                self.n_shed += 1
+            self.queue_high_water = max(self.queue_high_water, depth)
 
     def record_stale_requeue(self):
         """One submission re-enqueued because a rebuild raced its wave
         (the scheduler's per-item epoch re-validation refused to pair the
         old plan with the new synopsis)."""
-        self.n_stale_requeue += 1
+        with self._lock:
+            self.n_stale_requeue += 1
 
     def record_drain(self, stats):
         """One admission-loop drain (a ``scheduler.DrainStats``)."""
-        self.n_drains += 1
-        self.max_depth = max(self.max_depth, stats.depth)
-        self._depth_sum += stats.depth
-        self.causes[stats.cause] = self.causes.get(stats.cause, 0) + 1
+        with self._lock:
+            self.n_drains += 1
+            self.max_depth = max(self.max_depth, stats.depth)
+            self._depth_sum += stats.depth
+            self.causes[stats.cause] = self.causes.get(stats.cause, 0) + 1
 
     def record_wait(self, wait_s: float):
         """One submission's admission wait (submit -> drained into a wave)."""
-        self._wait.add(wait_s)
+        with self._lock:
+            self._wait.add(wait_s)
 
     def snapshot(self) -> dict:
         """Point-in-time admission stats (see ``docs/serving.md``)."""
-        p50, p99 = self._wait.percentiles_ms()
-        return {
-            "submitted": self.n_submitted,
-            "drains": self.n_drains,
-            "drain_causes": dict(self.causes),
-            "max_queue_depth": self.max_depth,
-            "mean_queue_depth": (self._depth_sum / self.n_drains
-                                 if self.n_drains else 0.0),
-            "wait_p50_ms": p50,
-            "wait_p99_ms": p99,
-            "rejected": self.n_rejected,
-            "shed": self.n_shed,
-            "queue_high_water": self.queue_high_water,
-            "stale_requeues": self.n_stale_requeue,
-        }
+        with self._lock:
+            p50, p99 = self._wait.percentiles_ms()
+            return {
+                "submitted": self.n_submitted,
+                "drains": self.n_drains,
+                "drain_causes": dict(self.causes),
+                "max_queue_depth": self.max_depth,
+                "mean_queue_depth": (self._depth_sum / self.n_drains
+                                     if self.n_drains else 0.0),
+                "wait_p50_ms": p50,
+                "wait_p99_ms": p99,
+                "rejected": self.n_rejected,
+                "shed": self.n_shed,
+                "queue_high_water": self.queue_high_water,
+                "stale_requeues": self.n_stale_requeue,
+            }
+
+
+# The EXPLAIN stage keys StageMetrics aggregates (matches
+# ``repro.obs.trace.QueryTrace.explain`` stage names).
+_STAGE_KEYS = ("plan", "admit", "queue", "assemble", "execute", "resolve")
+
+
+class StageMetrics:
+    """Trace-derived per-stage latency reservoirs (seconds in, ms out)."""
+
+    def __init__(self, reservoir: int = 4096):
+        self._lock = threading.Lock()
+        self._stages = {k: _Reservoir(reservoir, seed=2) for k in _STAGE_KEYS}
+        self.n_explained = 0
+
+    def record_explain(self, explain: dict):
+        """Fold one query's EXPLAIN breakdown into the stage reservoirs."""
+        with self._lock:
+            self.n_explained += 1
+            for key, res in self._stages.items():
+                ms = explain.get(f"{key}_ms")
+                if ms is not None:
+                    res.add(ms / 1e3)
+
+    def snapshot(self) -> dict:
+        """Per-stage ``{"p50_ms", "p99_ms"}`` plus the explained count."""
+        with self._lock:
+            out = {"explained": self.n_explained}
+            for key, res in self._stages.items():
+                p50, p99 = res.percentiles_ms()
+                out[key] = {"p50_ms": p50, "p99_ms": p99}
+            return out
 
 
 class Metrics:
@@ -188,20 +248,29 @@ class Metrics:
 
     def __init__(self, reservoir: int = 4096):
         self.reservoir = reservoir
+        self._lock = threading.Lock()
         self._tables: dict[str, TableMetrics] = {}
         self.admission = AdmissionMetrics(reservoir)
+        self.stages = StageMetrics(reservoir)
 
     def table(self, name: str) -> TableMetrics:
         """The (lazily created) ``TableMetrics`` for ``name``."""
         tm = self._tables.get(name)
         if tm is None:
-            tm = self._tables[name] = TableMetrics(self.reservoir)
+            with self._lock:
+                tm = self._tables.setdefault(name, TableMetrics(self.reservoir))
         return tm
+
+    def record_explain(self, explain: dict):
+        """One traced query's stage breakdown -> stage-latency reservoirs."""
+        self.stages.record_explain(explain)
 
     def snapshot(self, plan_cache=None, result_cache=None) -> dict:
         """Full telemetry snapshot: ``{"tables", "totals"}`` (see
         ``docs/serving.md`` for every field)."""
-        out = {name: tm.snapshot() for name, tm in sorted(self._tables.items())}
+        with self._lock:
+            tables = sorted(self._tables.items())
+        out = {name: tm.snapshot() for name, tm in tables}
         totals = {
             "queries_served": sum(t["queries_served"] for t in out.values()),
             "queries_executed": sum(t["queries_executed"] for t in out.values()),
@@ -209,6 +278,7 @@ class Metrics:
                 sum(t["batched"] for t in out.values())
                 / max(sum(t["queries_executed"] for t in out.values()), 1)),
             "admission": self.admission.snapshot(),
+            "stages": self.stages.snapshot(),
         }
         if plan_cache is not None:
             totals["plan_cache"] = plan_cache.stats()

@@ -133,11 +133,14 @@ class StreamingAdmission:
 
     def __init__(self, execute_cb, max_wait_ms: float = 2.0,
                  max_batch: int = 64, max_queue_depth: int = 0,
-                 shed_policy: str = "reject", shed_cb=None):
+                 shed_policy: str = "reject", shed_cb=None, tracer=None):
         if shed_policy not in SHED_POLICIES:
             raise ValueError(f"unknown shed_policy {shed_policy!r}; "
                              f"expected one of {SHED_POLICIES}")
         self.execute_cb = execute_cb
+        # Optional repro.obs.trace.Tracer: each drain emits an instant on
+        # the "admission" lane (cause/size/depth/oldest-wait).
+        self.tracer = tracer
         self.max_wait_ms = float(max_wait_ms)
         self.max_batch = int(max_batch)
         self.max_queue_depth = int(max_queue_depth)
@@ -263,7 +266,13 @@ class StreamingAdmission:
             waited = now - self._q[0][0]
             batch = [self._q.popleft()[1] for _ in range(take)]
             self._cv.notify_all()   # wake producers blocked on a full queue
-            return batch, DrainStats(cause, take, depth, waited)
+        stats = DrainStats(cause, take, depth, waited)
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.instant(
+                "drain", track="admission",
+                attrs={"cause": cause, "size": take, "depth": depth,
+                       "oldest_wait_ms": waited * 1e3})
+        return batch, stats
 
     def _loop(self):
         while True:
@@ -283,10 +292,16 @@ class BatchScheduler:
         max_group: hard cap on queries per fused launch (group splits).
         min_group: groups smaller than this skip the fused launch (a batch
             of one gains nothing from the kernel but still pays dispatch).
+        tracer: optional ``repro.obs.trace.Tracer``. When enabled, every
+            fused launch records a ``kernel`` span on the "worker" lane —
+            fenced with ``jax.block_until_ready`` so the interval is wall
+            time, not dispatch time — and (``tracer.annotate_jax``) opens a
+            matching ``jax.profiler.TraceAnnotation`` so the span lines up
+            inside a captured JAX profiler trace.
     """
 
     def __init__(self, catalog, mode: str | None = None,
-                 max_group: int = 256, min_group: int = 2):
+                 max_group: int = 256, min_group: int = 2, tracer=None):
         if mode is None:
             import jax
             mode = "pallas" if jax.default_backend() == "tpu" else "numpy"
@@ -298,6 +313,7 @@ class BatchScheduler:
         # Groups below min_group skip the fused launch: a batch of one gains
         # nothing from the kernel but still pays its dispatch.
         self.min_group = int(min_group)
+        self.tracer = tracer
         self.fastpath = (None if mode == "numpy"
                          else FastPath(use_pallas=(mode == "pallas")))
 
@@ -352,7 +368,10 @@ class BatchScheduler:
         """A per-item 'epoch moved mid-wave' outcome (plan not executed)."""
         return ScheduledResult(None, False, 0.0, stale=True)
 
-    def _run_single(self, items, idx, out):
+    def _tracing(self) -> bool:
+        return self.tracer is not None and self.tracer.enabled
+
+    def _run_single(self, items, idx, out, span: bool = True):
         item = items[idx]
         table, plan, epoch = item[0], item[1], self._item_epoch(item)
         engine, cur = self.catalog.snapshot(table)
@@ -361,7 +380,11 @@ class BatchScheduler:
             return
         t0 = time.perf_counter()
         res = engine.execute_plan(plan)
-        out[idx] = ScheduledResult(res, False, time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        if span and self._tracing():
+            self.tracer.add("single_exec", t0, t1, track="worker",
+                            attrs={"table": table})
+        out[idx] = ScheduledResult(res, False, t1 - t0)
 
     def _run_group(self, items, table, exec_col, idxs, out):
         engine, cur = self.catalog.snapshot(table)
@@ -375,20 +398,52 @@ class BatchScheduler:
         if not live:
             return
         ph = engine.ph
+        tracing = self._tracing()
         t0 = time.perf_counter()
         triples = None
         if len(live) > 0 and self.fastpath is not None:
             trees = [items[idx][1].tree for idx in live]
-            triples = self.fastpath.batch(ph, exec_col, trees,
-                                          engine.corrected)
+            if tracing and self.tracer.annotate_jax:
+                import jax.profiler
+                with jax.profiler.TraceAnnotation(
+                        f"aqp.fused:{table}.{exec_col}"):
+                    triples = self.fastpath.batch(ph, exec_col, trees,
+                                                  engine.corrected)
+            else:
+                triples = self.fastpath.batch(ph, exec_col, trees,
+                                              engine.corrected)
+            if tracing and triples is not None:
+                # Fence the fused launch so the kernel span is honest wall
+                # time; the per-query aggregation below would otherwise
+                # absorb the async dispatch.
+                import jax
+                jax.block_until_ready(triples)
+                self.tracer.add("kernel", t0, time.perf_counter(),
+                                track="worker",
+                                attrs={"table": table, "col": exec_col,
+                                       "queries": len(live)})
         if triples is None:       # ineligible after all: per-query fallback
+            # One group_exec span for the whole loop, not one per item:
+            # GROUP BY leaves land here ~10 at a time and per-leaf spans
+            # were the single largest traced-path cost (ring churn included)
+            # for zero extra information — the leaves are interchangeable.
             for idx in live:
-                self._run_single(items, idx, out)
+                self._run_single(items, idx, out, span=False)
+            if tracing:
+                self.tracer.add("group_exec", t0, time.perf_counter(),
+                                track="worker",
+                                attrs={"table": table, "col": exec_col,
+                                       "queries": len(live)})
             return
         for triple, idx in zip(triples, live):
             res = engine.execute_plan(items[idx][1], weightings=triple)
             out[idx] = ScheduledResult(res, True, 0.0)
-        share = (time.perf_counter() - t0) / len(live)
+        t1 = time.perf_counter()
+        if tracing:
+            self.tracer.add("wave_group", t0, t1, track="worker",
+                            attrs={"table": table, "col": exec_col,
+                                   "queries": len(live)})
+        share = (t1 - t0) / len(live)
         for idx in live:
             out[idx].latency_s = share
             out[idx].result.latency_s = share

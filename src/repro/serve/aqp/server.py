@@ -56,6 +56,7 @@ the single-table ``AQPFramework.query``.
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures
 import dataclasses
 import threading
@@ -64,6 +65,8 @@ import time
 from repro.core import sql as sqlmod
 from repro.core.query import (AdmissionRejected, QueryPlan, QueryResult,
                               assemble_groups)
+from repro.obs.export import spans_to_events, trace_json, write_trace
+from repro.obs.trace import QueryTrace, Tracer
 from repro.serve.aqp.cache import LRUCache, normalize_sql
 from repro.serve.aqp.catalog import TableCatalog
 from repro.serve.aqp.metrics import Metrics
@@ -98,6 +101,7 @@ class _Submission:
     missing: list | None = None      # GROUP BY: leaf indices still to execute
     cached_leaves: dict = dataclasses.field(default_factory=dict)
     retries: int = 0                 # stale-epoch re-enqueues (bounded)
+    trace: QueryTrace | None = None  # per-query trace (tracing enabled only)
 
 
 def _leaf_key(plan: QueryPlan) -> str:
@@ -137,6 +141,18 @@ class AQPServer:
         single_lock: compatibility/benchmark baseline — plan under the one
             big server lock (the pre-split critical section) instead of the
             lock-split submit path.
+        trace_enabled: per-query tracing (``repro.obs``): every submission
+            carries a ``QueryTrace`` through submit -> admission -> wave ->
+            resolution, its result gains an ``explain`` stage breakdown,
+            stage spans land in the server's span ring
+            (``export_trace``/``trace_json``), stage-latency percentiles
+            fold into ``stats()["totals"]["stages"]`` and queries slower
+            than ``slow_query_ms`` enter the bounded slow-query log.
+            Off by default: the disabled path adds no allocation and no
+            clock reads beyond the pre-existing ``t_submit`` stamp.
+        trace_buffer: span ring capacity (oldest spans overwritten).
+        slow_query_ms: slow-query log threshold on a traced query's
+            end-to-end latency (``explain()["total_ms"]``).
     """
 
     # A submission whose table epoch keeps moving mid-wave re-enqueues at
@@ -144,6 +160,10 @@ class AQPServer:
     # full rebuild landed inside one wave — more than a couple in a row
     # means the table is being rebuilt faster than queries can run).
     MAX_STALE_RETRIES = 5
+
+    # Bounded slow-query log: newest SLOW_LOG_CAP breakdowns whose total
+    # latency crossed ``slow_query_ms`` (a window, like the span ring).
+    SLOW_LOG_CAP = 256
 
     def __init__(self, catalog: TableCatalog | None = None,
                  mode: str | None = None,
@@ -153,17 +173,25 @@ class AQPServer:
                  max_group: int = 256, min_group: int = 2,
                  max_wait_ms: float = 2.0, max_batch: int = 64,
                  max_queue_depth: int = 1024, shed_policy: str = "reject",
-                 retry_timeout_s: float = 30.0, single_lock: bool = False):
+                 retry_timeout_s: float = 30.0, single_lock: bool = False,
+                 trace_enabled: bool = False, trace_buffer: int = 65536,
+                 slow_query_ms: float = 100.0):
         self.catalog = catalog or TableCatalog()
+        self.tracer = Tracer(capacity=trace_buffer, enabled=trace_enabled)
+        self.slow_query_ms = float(slow_query_ms)
+        self._slow_log: collections.deque = collections.deque(
+            maxlen=self.SLOW_LOG_CAP)
         self.scheduler = BatchScheduler(self.catalog, mode=mode,
                                         max_group=max_group,
-                                        min_group=min_group)
+                                        min_group=min_group,
+                                        tracer=self.tracer)
         self.admission = StreamingAdmission(self._execute_wave,
                                             max_wait_ms=max_wait_ms,
                                             max_batch=max_batch,
                                             max_queue_depth=max_queue_depth,
                                             shed_policy=shed_policy,
-                                            shed_cb=self._on_shed)
+                                            shed_cb=self._on_shed,
+                                            tracer=self.tracer)
         self.plan_cache = LRUCache(plan_cache_size)
         self.result_cache = LRUCache(result_cache_size,
                                      max_bytes=max_result_bytes)
@@ -253,6 +281,9 @@ class AQPServer:
         fut = QueryFuture(sql_text)
         t_submit = time.perf_counter()
         norm = normalize_sql(sql_text)
+        # Per-query trace only when tracing: the disabled path pays no
+        # allocation beyond the future itself.
+        trace = QueryTrace(t_submit) if self.tracer.enabled else None
         sub = None
         with self._state_lock:
             self.metrics.admission.record_submit()
@@ -261,9 +292,9 @@ class AQPServer:
                 inflight.futures.append(fut)
                 return fut
             if self.single_lock:              # legacy: plan under the lock
-                sub = self._plan_admit(fut, norm, t_submit)
+                sub = self._plan_admit(fut, norm, t_submit, trace)
         if not self.single_lock:
-            sub = self._plan_admit(fut, norm, t_submit)
+            sub = self._plan_admit(fut, norm, t_submit, trace)
         if sub is not None:
             self._enqueue(sub)
         return fut
@@ -323,8 +354,8 @@ class AQPServer:
 
     # ------------------------------------------------------ submit-side helpers
 
-    def _plan_admit(self, fut: QueryFuture, norm: str,
-                    t_submit: float) -> _Submission | None:
+    def _plan_admit(self, fut: QueryFuture, norm: str, t_submit: float,
+                    trace: QueryTrace | None = None) -> _Submission | None:
         """Plan ``norm``, then admit it under a short state-lock section.
 
         Returns the ``_Submission`` the caller should enqueue, or None when
@@ -334,10 +365,13 @@ class AQPServer:
         released.
         """
         try:
-            table, plan, epoch = self._plan_for(norm)
+            table, plan, epoch, plan_cached = self._plan_for(norm)
         except Exception as exc:          # PlanError / stale RuntimeError
             fut.set_exception(exc)
             return None
+        if trace is not None:
+            trace.t_planned = time.perf_counter()
+            trace.plan_cache_hit = plan_cached
         hit = None
         with self._state_lock:
             inflight = self._inflight.get(norm)
@@ -350,7 +384,8 @@ class AQPServer:
                 hit = rentry.value
             else:
                 self.result_cache.miss(table)
-                sub = _Submission(norm, table, plan, epoch, t_submit, [fut])
+                sub = _Submission(norm, table, plan, epoch, t_submit, [fut],
+                                  trace=trace)
                 if plan.leaf_plans:
                     self._lookup_leaves(sub)
                     if not sub.missing:   # every leaf served from cache
@@ -358,8 +393,17 @@ class AQPServer:
                 if hit is None:
                     self._inflight[norm] = sub
         if hit is not None:
-            fut.set_result(dataclasses.replace(hit, latency_s=0.0))
+            if trace is not None:
+                trace.result_cache_hit = True
+                trace.t_resolved = time.perf_counter()
+                exp = self._trace_done(trace, norm)
+                fut.set_result(dataclasses.replace(hit, latency_s=0.0,
+                                                   explain=exp))
+            else:
+                fut.set_result(dataclasses.replace(hit, latency_s=0.0))
             return None
+        if trace is not None:
+            trace.t_admitted = time.perf_counter()
         return sub
 
     def _enqueue(self, sub: _Submission, requeue: bool = False):
@@ -394,12 +438,20 @@ class AQPServer:
                 del self._inflight[sub.norm]
             futures = list(sub.futures)
             self.metrics.admission.record_shed(reason, depth)
+        if sub.trace is not None:
+            sub.trace.rejected = True
+            sub.trace.t_resolved = time.perf_counter()
+            self.tracer.instant("shed", track="admission",
+                                attrs={"reason": reason, "depth": depth,
+                                       "qid": sub.trace.qid})
+            sub.trace.emit_spans(self.tracer, sub.norm)
         for fut in futures:
             fut.set_result(AdmissionRejected(reason=reason,
                                              queue_depth=depth))
 
     def _plan_for(self, norm: str):
-        """Plan (via cache) -> (table, plan, epoch the plan is valid at).
+        """Plan (via cache) -> (table, plan, epoch the plan is valid at,
+        cache-hit flag).
 
         Engine and epoch come from one atomic ``catalog.snapshot``, so the
         plan is tagged with exactly the epoch of the synopsis its literals
@@ -416,7 +468,7 @@ class AQPServer:
         with self._plan_lock:
             entry = self.plan_cache.get(norm, self.catalog.epoch)
             if entry is not None:
-                return entry.table, entry.value, entry.epoch
+                return entry.table, entry.value, entry.epoch, True
         parsed = sqlmod.parse_sql(norm)
         table = parsed.table
         with self._plan_lock:
@@ -425,7 +477,7 @@ class AQPServer:
         plan = engine.plan_query(parsed)
         with self._plan_lock:
             self.plan_cache.put(norm, table, epoch, plan)
-        return table, plan, epoch
+        return table, plan, epoch, False
 
     def _lookup_leaves(self, sub: _Submission):
         """Fill ``sub.cached_leaves`` / ``sub.missing`` from the result cache
@@ -447,7 +499,7 @@ class AQPServer:
         Re-plan against the current synopsis (plan cache was purged by the
         epoch bump) and refresh the per-leaf cache lookups; raises the
         usual PlanError/RuntimeError if the table is gone or stale."""
-        sub.table, sub.plan, sub.epoch = self._plan_for(sub.norm)
+        sub.table, sub.plan, sub.epoch, _cached = self._plan_for(sub.norm)
         sub.missing = None
         if sub.plan.leaf_plans:
             with self._state_lock:
@@ -462,6 +514,21 @@ class AQPServer:
         tm.record_group_expansion(0, len(sub.cached_leaves))
         self.result_cache.put(sub.norm, sub.table, sub.epoch, result)
         return result
+
+    def _trace_done(self, trace: QueryTrace, label: str) -> dict:
+        """Finalize a resolved query's trace: assemble the EXPLAIN
+        breakdown, emit its stage spans, fold the stage latencies into the
+        metrics reservoirs and (past ``slow_query_ms``) append to the
+        bounded slow-query log. Returns the explain dict for attachment to
+        the outgoing result. No server lock held (metrics self-lock)."""
+        exp = trace.explain()
+        trace.emit_spans(self.tracer, label)
+        self.metrics.record_explain(exp)
+        if exp["total_ms"] >= self.slow_query_ms:
+            entry = dict(exp)
+            entry["sql"] = label
+            self._slow_log.append(entry)
+        return exp
 
     # ------------------------------------------------------- admission worker
 
@@ -490,6 +557,11 @@ class AQPServer:
             self.metrics.admission.record_drain(drain)
             for sub in batch:
                 self.metrics.admission.record_wait(now - sub.t_submit)
+        for sub in batch:
+            if sub.trace is not None:
+                sub.trace.t_drained = now
+                sub.trace.drain_cause = drain.cause
+                sub.trace.wave_size = drain.size
         prefailed: dict[int, Exception] = {}
         for sub in batch:
             if sub.epoch != self.catalog.epoch(sub.table):
@@ -517,6 +589,7 @@ class AQPServer:
                 slots.append((sub, None))
 
         errors: dict[int, Exception] = {}
+        t_exec0 = time.perf_counter()
         try:
             scheduled = self.scheduler.execute(items)
         except Exception:
@@ -526,6 +599,7 @@ class AQPServer:
                     scheduled[k] = self.scheduler.execute([item])[0]
                 except Exception as exc:       # isolate the poisoned item
                     errors[k] = exc
+        t_exec1 = time.perf_counter()
 
         leaf_out: dict[int, dict] = {}         # id(sub) -> {leaf_idx: sr}
         failed = dict(prefailed)               # id(sub) -> first error
@@ -561,6 +635,7 @@ class AQPServer:
         # resolved here, any submit after it plans afresh. Pure group
         # assembly runs unlocked too.
         for sub in batch:
+            tr = sub.trace
             if id(sub) in stale:
                 # Keep the in-flight entry (dupes still attach) and send the
                 # submission back through admission — bypassing backpressure
@@ -569,10 +644,15 @@ class AQPServer:
                 sub.retries += 1
                 with self._state_lock:
                     self.metrics.admission.record_stale_requeue()
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "requeue", track="worker",
+                        attrs={"table": sub.table, "retries": sub.retries})
                 self._enqueue(sub, requeue=True)
                 continue
             err = failed.get(id(sub))
             result = None
+            batched = False
             if err is None and sub.plan.leaf_plans:
                 executed = leaf_out.get(id(sub), {})
                 leaf_results = dict(sub.cached_leaves)
@@ -581,6 +661,7 @@ class AQPServer:
                 result = assemble_groups(sub.plan, leaf_results)
                 result.latency_s = sum(sr.latency_s
                                        for sr in executed.values())
+                batched = any(sr.batched for sr in executed.values())
             with self._state_lock:
                 self._inflight.pop(sub.norm, None)
                 futures = list(sub.futures)
@@ -588,16 +669,34 @@ class AQPServer:
                     if sub.plan.leaf_plans:
                         self._finish_group(sub, executed, result)
                     else:
-                        result = self._finish_single(sub, direct[id(sub)])
+                        sr = direct[id(sub)]
+                        result = self._finish_single(sub, sr)
+                        batched = sr.batched
                     for _ in futures[1:]:      # served dupes = result hits
                         self.metrics.table(sub.table).record_result_hit()
             if err is not None:
+                if tr is not None:             # spans still tell the story
+                    tr.t_exec0, tr.t_exec1 = t_exec0, t_exec1
+                    tr.t_resolved = time.perf_counter()
+                    tr.emit_spans(self.tracer, sub.norm)
                 for fut in futures:
                     fut.set_exception(err)
             else:
-                # Primary future gets the real latency; in-flight
-                # duplicates are served copies.
-                futures[0].set_result(result)
+                # Primary future gets the real latency (and, when traced,
+                # its own explain-carrying copy — the cached result object
+                # stays explain-free, a breakdown describes ONE submission);
+                # in-flight duplicates are served copies.
+                if tr is not None:
+                    tr.t_exec0, tr.t_exec1 = t_exec0, t_exec1
+                    tr.kernel_share_s = result.latency_s
+                    tr.batched = batched
+                    tr.retries = sub.retries
+                    tr.t_resolved = time.perf_counter()
+                    exp = self._trace_done(tr, sub.norm)
+                    futures[0].set_result(
+                        dataclasses.replace(result, explain=exp))
+                else:
+                    futures[0].set_result(result)
                 for fut in futures[1:]:
                     fut.set_result(dataclasses.replace(result, latency_s=0.0))
 
@@ -638,4 +737,33 @@ class AQPServer:
         # side only sees shed-time observations — report the max of both.
         adm["queue_high_water"] = max(adm["queue_high_water"],
                                       self.admission.high_water)
+        snap["tracing"] = {
+            "enabled": self.tracer.enabled,
+            "spans_recorded": self.tracer.n_recorded,
+            "spans_dropped": self.tracer.n_dropped,
+            "buffer_capacity": self.tracer.capacity,
+            "slow_queries": len(self._slow_log),
+            "slow_query_ms": self.slow_query_ms,
+        }
         return snap
+
+    # ----------------------------------------------------------------- tracing
+
+    def trace_events(self) -> list[dict]:
+        """The span ring as Chrome/Perfetto ``trace_event`` dicts (one lane
+        per query plus admission/worker lanes)."""
+        return spans_to_events(self.tracer.spans())
+
+    def trace_json(self) -> str:
+        """The span ring serialized as trace_event JSON (paste into
+        https://ui.perfetto.dev or chrome://tracing)."""
+        return trace_json(self.trace_events())
+
+    def export_trace(self, path) -> str:
+        """Write the trace_event JSON artifact to ``path``; returns it."""
+        return write_trace(path, self.trace_events())
+
+    def slow_queries(self) -> list[dict]:
+        """The bounded slow-query log, oldest first: explain breakdowns
+        (plus ``sql``) of traced queries slower than ``slow_query_ms``."""
+        return list(self._slow_log)

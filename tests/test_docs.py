@@ -17,6 +17,6 @@ def test_check_docs_passes():
 
 def test_docs_tree_complete():
     for name in ("architecture.md", "serving.md", "construction.md",
-                 "benchmarks.md"):
+                 "benchmarks.md", "observability.md"):
         assert (REPO / "docs" / name).is_file(), f"docs/{name} missing"
     assert (REPO / "README.md").is_file()
