@@ -36,6 +36,14 @@ Two further modes (PR 3):
     ``query_batch`` at batch 16/64 (acceptance: > 2x qps at batch >= 16 —
     the planning-time leaf expansion + per-leaf result cache + fused leaf
     launches vs the sequential per-category loop).
+
+Planning mode (PR 7): per-plan cold ``plan_sql`` latency vs the zero-parse
+template-bind path (scalar and wave-vectorized ``bind_batch``), plus the
+overload harness rerun with plan templating on vs off over a repeat-shape
+all-distinct-literal workload — acceptance: templated ``submit_qps`` >=
+1.5x the plain (PR 4 parity) run. The split / single_lock overload rows
+keep templating OFF so they remain comparable with their pre-templating
+history.
 """
 from __future__ import annotations
 
@@ -48,6 +56,7 @@ import numpy as np
 from benchmarks.common import RESULTS_DIR, emit, save_json
 from repro.aqp.datasets import load
 from repro.aqp.engine import AQPFramework
+from repro.core.sql import fingerprint_sql, parse_sql
 from repro.core.types import BuildParams
 from repro.obs.export import validate_trace_events, write_trace
 from repro.obs.trace import Tracer
@@ -259,7 +268,8 @@ def _streaming_run(frameworks, workload, rate_qps: float, rng):
 
 
 def _overload_run(frameworks, workloads, single_lock: bool,
-                  max_queue_depth: int = 128):
+                  max_queue_depth: int = 128,
+                  plan_templates: bool = False):
     """Fixed-work overload: N submitter threads blast the bounded queue as
     fast as they can (no pacing). ``shed_policy="block"`` paces producers
     to the consumer, so every query is answered and no work is shed — the
@@ -275,11 +285,16 @@ def _overload_run(frameworks, workloads, single_lock: bool,
     bounded (planning is Python, so submitters serialize on the GIL
     whether or not they serialize on a lock); the structural win shows up
     where execution is device-side (TPU) or planning runs without the GIL.
+
+    Plan templating defaults OFF here so the split / single_lock rows stay
+    directly comparable with their pre-templating baselines; the planning
+    mode flips it on explicitly for the templated-vs-plain comparison.
     """
     n_threads = len(workloads)
     srv = AQPServer(max_wait_ms=1.0, max_batch=64,
                     max_queue_depth=max_queue_depth,
-                    shed_policy="block", single_lock=single_lock)
+                    shed_policy="block", single_lock=single_lock,
+                    plan_templates=plan_templates)
     for name, fw in frameworks.items():
         srv.register(name, fw)
     futs = [[] for _ in range(n_threads)]
@@ -323,6 +338,39 @@ def _overload_run(frameworks, workloads, single_lock: bool,
         "rejected": adm["rejected"],
         "shed": adm["shed"],
     }
+
+
+def _planning_micro(framework, sqls: list[str], reps: int = 3) -> dict:
+    """Per-plan planning latency: cold ``plan_sql`` (parse + plan) vs the
+    zero-parse template path (fingerprint + ``bind``) vs the wave-vectorized
+    ``bind_batch`` over the whole set, all producing bit-for-bit equal
+    plans. Median of ``reps`` sweeps over ``sqls`` (distinct literals, one
+    shape)."""
+    engine = framework.engine
+    template = engine.plan_template(parse_sql(sqls[0]))
+    cold_us, bind_us, batch_us = [], [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for sql in sqls:
+            engine.plan_sql(sql)
+        cold_us.append((time.perf_counter() - t0) / len(sqls) * 1e6)
+        t0 = time.perf_counter()
+        for sql in sqls:
+            template.bind(fingerprint_sql(sql).literals)
+        bind_us.append((time.perf_counter() - t0) / len(sqls) * 1e6)
+        t0 = time.perf_counter()
+        template.bind_batch([fingerprint_sql(s).literals for s in sqls])
+        batch_us.append((time.perf_counter() - t0) / len(sqls) * 1e6)
+    out = {
+        "plans": len(sqls),
+        "cold_plan_us": float(np.median(cold_us)),
+        "template_bind_us": float(np.median(bind_us)),
+        "template_bind_batch_us": float(np.median(batch_us)),
+    }
+    out["bind_speedup"] = out["cold_plan_us"] / out["template_bind_us"]
+    out["bind_batch_speedup"] = (out["cold_plan_us"]
+                                 / out["template_bind_batch_us"])
+    return out
 
 
 def run(rows: list, quick: bool = False, trace: bool = False):
@@ -470,6 +518,54 @@ def run(rows: list, quick: bool = False, trace: bool = False):
                / out["overload"]["single_lock"]["qps"])
     out["overload"]["speedup"] = speedup
     emit(rows, "serving/overload_speedup", None, f"{speedup:.1f}x")
+
+    # Planning fast path (PR 7). Two measurements:
+    #   micro — cold plan_sql (parse + plan) vs zero-parse template bind vs
+    #   wave-vectorized bind_batch, per plan, same shape / distinct literals;
+    #   overload — the submit-path throughput with templating on vs off
+    #   (off = the PR 4 parity baseline above) on a repeat-shape,
+    #   all-distinct-literal workload: every query misses the text-keyed
+    #   plan cache, so only the template path can skip the parse. The queue
+    #   bound is raised so producers never block on the drain — submit_qps
+    #   isolates the submit path, which is what templating changes.
+    pl_var = 128 if quick else 256
+    pl_sqls = _template_pool(fl_table, "flights", rng, 1, pl_var)
+    out["planning"] = {"micro": _planning_micro(frameworks["flights"],
+                                                pl_sqls)}
+    mic = out["planning"]["micro"]
+    emit(rows, "serving/planning_cold_plan", mic["cold_plan_us"],
+         f"{mic['cold_plan_us']:.0f} us/plan")
+    emit(rows, "serving/planning_template_bind", mic["template_bind_us"],
+         f"{mic['template_bind_us']:.0f} us/plan "
+         f"({mic['bind_speedup']:.1f}x vs cold)")
+    emit(rows, "serving/planning_bind_batch", mic["template_bind_batch_us"],
+         f"{mic['template_bind_batch_us']:.0f} us/plan "
+         f"({mic['bind_batch_speedup']:.1f}x vs cold)")
+
+    tp_pool = [(sql, "flights") for sql in _template_pool(
+        fl_table, "flights", rng, 6, ov_threads * ov_per_thread // 6 + 1)]
+    tp_wls = [[tp_pool[i] for i in range(ti, len(tp_pool), ov_threads)]
+              for ti in range(ov_threads)]
+    _overload_run(frameworks, tp_wls, single_lock=False,
+                  max_queue_depth=4096, plan_templates=True)     # warm-up
+    tp_runs = {"plain": [], "templated": []}
+    for _ in range(reps):                   # interleave: box drift is real
+        for label, templ in (("plain", False), ("templated", True)):
+            tp_runs[label].append(_overload_run(
+                frameworks, tp_wls, single_lock=False,
+                max_queue_depth=4096, plan_templates=templ))
+    for label in ("plain", "templated"):
+        med = sorted(tp_runs[label], key=lambda r: r["submit_qps"])[
+            (len(tp_runs[label]) - 1) // 2]
+        out["planning"][label] = med
+        emit(rows, f"serving/planning_submit_qps_{label}",
+             1e6 / med["submit_qps"], f"{med['submit_qps']:.0f} submit qps")
+    t_speedup = (out["planning"]["templated"]["submit_qps"]
+                 / out["planning"]["plain"]["submit_qps"])
+    out["planning"]["templating_speedup"] = t_speedup
+    out["planning"]["queries"] = len(tp_pool)
+    emit(rows, "serving/planning_templating_speedup", None,
+         f"{t_speedup:.1f}x")
 
     # Tracing overhead (PR 6 acceptance): enabled-vs-disabled median latency
     # on the repeat-traffic workload, plus the measured disabled-guard cost

@@ -78,7 +78,8 @@ build_knobs = class_fields("src/repro/core/types.py", "BuildParams")
 serving_knobs = ["mode", "plan_cache_size", "result_cache_size",
                  "max_result_bytes", "max_group", "min_group",
                  "max_wait_ms", "max_batch", "max_queue_depth",
-                 "shed_policy", "retry_timeout_s", "single_lock"]
+                 "shed_policy", "retry_timeout_s", "single_lock",
+                 "plan_templates", "template_cache_size", "planner_workers"]
 obs_knobs = ["trace_enabled", "trace_buffer", "slow_query_ms"]
 docs = {p: p.read_text() for p in sorted(ROOT.glob("docs/*.md"))}
 for knob, home in ([(k, "construction") for k in build_knobs]

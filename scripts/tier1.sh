@@ -10,6 +10,9 @@
 #   scripts/tier1.sh --trace-smoke # observability smoke: tiny traced
 #                                  # build+serve, trace_event schema
 #                                  # validation, overhead budget (< 5%)
+#   scripts/tier1.sh --plan-smoke  # planner smoke: zero parse_sql calls on
+#                                  # the template-hit path (counter-based)
+#                                  # + bit-for-bit hit-vs-cold plans
 set -euo pipefail
 cd "$(dirname "$0")/.."
 if [[ "${1:-}" == "--stress" ]]; then
@@ -24,6 +27,13 @@ if [[ "${1:-}" == "--trace-smoke" ]]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         timeout "${TRACE_SMOKE_BUDGET_S:-300}" \
         python scripts/trace_smoke.py "$@"
+    exit $?
+fi
+if [[ "${1:-}" == "--plan-smoke" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        timeout "${PLAN_SMOKE_BUDGET_S:-300}" \
+        python scripts/plan_smoke.py "$@"
     exit $?
 fi
 scripts/check_docs.sh

@@ -117,6 +117,10 @@ class QueryPlan:
     # GROUP BY expansion (populated by plan_query for categorical group_by).
     leaf_plans: tuple = ()    # tuple[QueryPlan]: per-category leaf plans
     group_values: tuple = ()  # decoded category values aligned with leaf_plans
+    # Memoized canonical_key (the serving layer calls it on every cache
+    # lookup; the tree never mutates after planning, so stringify once).
+    _ckey: str | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def canonical_key(self) -> str:
         """Text-independent identity of this plan's *semantics*.
@@ -126,9 +130,12 @@ class QueryPlan:
         from (clause order, whitespace, redundant parentheses). The serving
         layer keys per-leaf result-cache entries on this, so overlapping
         GROUP BY queries (and textual variants of one query) share entries.
+        Memoized: the predicate tree is frozen after planning.
         """
-        return (f"{self.table}|{self.func}|{self.agg_col}|"
-                f"{self.group_by}|{tree_key(self.tree)}")
+        if self._ckey is None:
+            self._ckey = (f"{self.table}|{self.func}|{self.agg_col}|"
+                          f"{self.group_by}|{tree_key(self.tree)}")
+        return self._ckey
 
     def and_leaves(self):
         """Leaves of a pure-AND tree, or None (OR / no WHERE)."""
@@ -176,6 +183,218 @@ def assemble_groups(plan: QueryPlan, leaf_results: dict) -> QueryResult:
     return QueryResult(None, None, None, groups=groups)
 
 
+# ---------------------------------------------------------------------------
+# Plan templates (zero-parse fast path)
+# ---------------------------------------------------------------------------
+#
+# A compiled recipe for one query *shape* (literal-stripped fingerprint).
+# The key fact making this sound: the consolidated tree STRUCTURE is
+# literal-independent — ``_consolidate`` merges leaves by column
+# multiplicity and orders children (merged-by-first-occurrence, then
+# non-leaf rest) without ever looking at a literal value.  Only Leaf
+# values and Consolidated interval *contents* vary between two queries of
+# the same shape, so a recipe tree with literal-slot indices can bind any
+# literal vector of that shape into a plan bit-for-bit equal to the cold
+# ``parse_sql`` -> ``plan_query`` path.
+
+@dataclasses.dataclass
+class _SlotLeaf:
+    """Recipe for a ``Leaf``: encoded literal comes from slot ``slot``."""
+    col: int
+    op: str
+    slot: int
+
+
+@dataclasses.dataclass
+class _SlotMerge:
+    """Recipe for a ``Consolidated``: re-runs the same interval merge that
+    ``_consolidate`` performed at compile, over the new slot values."""
+    col: int
+    kind: str                  # "and" | "or" of the merging parent node
+    parts: list                # [(op, slot), ...] in leaf order
+    mu: float
+
+
+@dataclasses.dataclass
+class _SlotNode:
+    """Recipe for a ``Node``: children already recipe nodes, in order."""
+    kind: str
+    children: list
+
+
+class PlanTemplate:
+    """Compiled planner for one query shape: binds literals -> ``QueryPlan``.
+
+    Compiled once per (shape, epoch) from a cold parse+plan; after that,
+    ``bind`` produces plans without touching ``parse_sql``/``plan_query``.
+    ``bind_batch`` encodes the literal vectors of a whole wave in one numpy
+    pass (all-numeric shapes), then assembles the per-query trees.
+    """
+
+    def __init__(self, engine: "QueryEngine", parsed: sqlmod.ParsedQuery):
+        ph = engine.ph
+        self._engine = engine
+        self.func = parsed.func
+        self.table = parsed.table
+        self.agg_col = (None if parsed.agg_col == "*"
+                        else ph.col_index(parsed.agg_col))
+        self.group_by = (None if parsed.group_by is None
+                         else ph.col_index(parsed.group_by))
+        self._slot_cols: list[int] = []       # slot -> column index
+        slot_tree = self._compile_encode(parsed.where)
+        self.recipe = self._compile_consolidate(slot_tree)
+        self.n_slots = len(self._slot_cols)
+        self._columns = [ph.columns[c] for c in self._slot_cols]
+        # Vectorized-encode constants (numeric shapes only; categorical
+        # slots need .index() per literal, so they take the scalar path).
+        self.numeric_only = all(c.kind != "categorical" for c in self._columns)
+        if self.numeric_only and self.n_slots:
+            self._scales = np.array([c.scale for c in self._columns])
+            self._offsets = np.array([c.offset for c in self._columns])
+        # exec_col depends only on the column set -> compile-time constant.
+        self.exec_col = self.agg_col
+        if self.agg_col is None and self.recipe is not None:
+            self.exec_col = min(self._recipe_cols(self.recipe, set()))
+        # GROUP BY expansion constants: category leaves, values, and the
+        # (invariant) per-leaf exec_col, computed once at compile.
+        if self.group_by is not None:
+            col = ph.columns[self.group_by]
+            if col.kind != "categorical":
+                raise PlanError(
+                    f"GROUP BY requires a categorical column, got {col.name!r}")
+            self.cat_leaves = tuple(
+                wlib.Leaf(self.group_by, "=", float(code))
+                for code in range(len(col.categories)))
+            self.group_values = tuple(col.categories)
+            self.leaf_exec_col = self.agg_col
+            if self.agg_col is None:
+                cols = (self._recipe_cols(self.recipe, set())
+                        if self.recipe is not None else set())
+                cols.add(self.group_by)
+                self.leaf_exec_col = min(cols)
+
+    # ------------------------------------------------------------- compile
+
+    def _compile_encode(self, raw):
+        """Mirror of ``_encode``: RawCond -> _SlotLeaf, slots in token order
+        (the parser emits RawConds left-to-right, child order preserved)."""
+        if raw is None:
+            return None
+        if isinstance(raw, sqlmod.RawCond):
+            slot = len(self._slot_cols)
+            self._slot_cols.append(self._engine.ph.col_index(raw.col))
+            return _SlotLeaf(self._slot_cols[slot], raw.op, slot)
+        return _SlotNode(raw.kind,
+                         [self._compile_encode(ch) for ch in raw.children])
+
+    def _compile_consolidate(self, node):
+        """Mirror of ``_consolidate`` over slot nodes: same grouping, same
+        child order, values replaced by slot references."""
+        if node is None or isinstance(node, _SlotLeaf):
+            return node
+        children = [self._compile_consolidate(ch) for ch in node.children]
+        by_col: dict[int, list] = {}
+        rest = []
+        for ch in children:
+            if isinstance(ch, _SlotLeaf):
+                by_col.setdefault(ch.col, []).append(ch)
+            else:
+                rest.append(ch)
+        merged = []
+        for col, leaves in by_col.items():
+            if len(leaves) == 1:
+                merged.append(leaves[0])
+                continue
+            merged.append(_SlotMerge(col, node.kind,
+                                     [(lf.op, lf.slot) for lf in leaves],
+                                     self._engine.ph.columns[col].mu))
+        out = merged + rest
+        if len(out) == 1:
+            return out[0]
+        return _SlotNode(node.kind, out)
+
+    def _recipe_cols(self, node, acc):
+        if isinstance(node, (_SlotLeaf, _SlotMerge)):
+            acc.add(node.col)
+            return acc
+        for ch in node.children:
+            self._recipe_cols(ch, acc)
+        return acc
+
+    # ---------------------------------------------------------------- bind
+
+    def encode_literals(self, literals):
+        """Scalar per-slot encode (same ``ColumnInfo.encode`` as cold path)."""
+        if len(literals) != self.n_slots:
+            raise PlanError(
+                f"template expects {self.n_slots} literals, got {len(literals)}")
+        return [c.encode(v) for c, v in zip(self._columns, literals)]
+
+    def encode_batch(self, rows):
+        """Encode a wave's literal vectors in one numpy pass.
+
+        Returns an ``(n_rows, n_slots)`` float array, or ``None`` when this
+        shape can't vectorize (categorical slots, string literals) — the
+        caller falls back to per-row ``encode_literals``.  Elementwise
+        identical to the scalar path: both funnel through ``np.round``.
+        """
+        if not self.numeric_only or not self.n_slots:
+            return None
+        try:
+            lit = np.asarray(rows, dtype=float)
+        except (TypeError, ValueError):
+            return None
+        if lit.ndim != 2 or lit.shape[1] != self.n_slots:
+            return None
+        return np.round(lit * self._scales - self._offsets, 6)
+
+    def _bind_tree(self, node, enc):
+        if node is None:
+            return None
+        if isinstance(node, _SlotLeaf):
+            return wlib.Leaf(node.col, node.op, enc[node.slot])
+        if isinstance(node, _SlotMerge):
+            sets = [covlib.cond_to_intervals(op, enc[slot], node.mu)
+                    for op, slot in node.parts]
+            ivs = (covlib.intersect_intervals(sets) if node.kind == "and"
+                   else covlib.union_intervals(sets))
+            return wlib.Consolidated(node.col, ivs)
+        return wlib.Node(node.kind,
+                         [self._bind_tree(ch, enc) for ch in node.children])
+
+    def _assemble(self, enc) -> QueryPlan:
+        tree = self._bind_tree(self.recipe, enc)
+        plan = QueryPlan(self.func, self.agg_col, tree, self.group_by,
+                         self.table, self.exec_col)
+        if self.group_by is not None:
+            leaves = []
+            for cleaf in self.cat_leaves:
+                sub = cleaf if tree is None else \
+                    wlib.Node("and", [cleaf, tree])
+                leaves.append(QueryPlan(self.func, self.agg_col, sub, None,
+                                        self.table, self.leaf_exec_col))
+            plan.leaf_plans = tuple(leaves)
+            plan.group_values = self.group_values
+        return plan
+
+    def bind(self, literals) -> QueryPlan:
+        """One literal vector -> ``QueryPlan`` (no parse, no raw-tree walk)."""
+        return self._assemble(self.encode_literals(literals))
+
+    def bind_batch(self, rows) -> list:
+        """Many literal vectors -> plans; encoding vectorized when possible."""
+        for row in rows:
+            if len(row) != self.n_slots:
+                raise PlanError(
+                    f"template expects {self.n_slots} literals, got {len(row)}")
+        enc = self.encode_batch(rows)
+        if enc is None:
+            return [self._assemble(self.encode_literals(r)) for r in rows]
+        # .tolist() drops back to Python floats so tree_key reprs (and
+        # hence canonical/cache keys) match the scalar path exactly.
+        return [self._assemble(row) for row in enc.tolist()]
+
+
 class QueryEngine:
     """Executes the paper's query templates against a PairwiseHist synopsis."""
 
@@ -194,6 +413,18 @@ class QueryEngine:
 
     def plan_sql(self, sql_text: str) -> QueryPlan:
         return self.plan_query(sqlmod.parse_sql(sql_text))
+
+    def plan_template(self, parsed: sqlmod.ParsedQuery) -> PlanTemplate:
+        """Compile a reusable zero-parse planner for this query's shape.
+
+        The template binds any literal vector of the same fingerprint shape
+        (``sql.fingerprint_sql``) into a plan bit-for-bit equal to
+        ``plan_query`` on the equivalent parse. Valid for this synopsis
+        generation only — encode scales, category tables and consolidation
+        grids are baked in at compile (the serving layer epoch-keys its
+        template cache accordingly).
+        """
+        return PlanTemplate(self, parsed)
 
     def plan_query(self, q: sqlmod.ParsedQuery) -> QueryPlan:
         """Parsed query -> reusable QueryPlan (encode + consolidate).
@@ -226,14 +457,17 @@ class QueryEngine:
         if col.kind != "categorical":
             raise PlanError(
                 f"GROUP BY requires a categorical column, got {col.name!r}")
+        exec_col = plan.agg_col
+        if exec_col is None:                       # COUNT(*): cheapest column
+            # Every leaf tree is {gcol} AND-ed onto the same WHERE tree, so
+            # the column set — and hence exec_col — is invariant across
+            # categories: compute it once per plan, not once per leaf.
+            exec_col = min(self._tree_cols(plan.tree, {gcol}))
         leaves, values = [], []
         for code, value in enumerate(col.categories):
             leaf = wlib.Leaf(gcol, "=", float(code))
             sub = leaf if plan.tree is None else \
                 wlib.Node("and", [leaf, plan.tree])
-            exec_col = plan.agg_col
-            if exec_col is None:                   # COUNT(*): cheapest column
-                exec_col = min(self._tree_cols(sub, set()))
             leaves.append(QueryPlan(plan.func, plan.agg_col, sub, None,
                                     plan.table, exec_col))
             values.append(value)

@@ -20,15 +20,16 @@ AGG_FUNCS = ("COUNT", "SUM", "AVG", "MIN", "MAX", "MEDIAN", "VAR")
 
 _TOKEN_RE = re.compile(
     r"""
-    \s*(
-        (?P<num>-?\d+\.?\d*([eE][+-]?\d+)?)
+        (?P<num>-?\d+\.?\d*(?:[eE][+-]?\d+)?)
       | (?P<str>'[^']*'|"[^"]*")
       | (?P<op><=|>=|!=|<>|=|<|>)
       | (?P<punc>[(),;*])
       | (?P<word>[A-Za-z_][A-Za-z_0-9.]*)
-    )""",
+    """,
     re.VERBOSE,
 )
+
+_WHITESPACE = " \t\n\r\f\v"
 
 
 @dataclasses.dataclass
@@ -57,27 +58,91 @@ class SQLError(ValueError):
     pass
 
 
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    """Literal-stripped shape of a query plus its extracted literal vector.
+
+    ``shape`` is a canonical token string with every literal replaced by
+    ``?``; two queries with equal shapes parse to structurally identical
+    trees and differ only in the literal values, so a compiled
+    ``PlanTemplate`` for one binds the other's literals bit-for-bit.
+    ``literals`` holds the stripped values in token order, exactly as the
+    parser would have produced them (numbers as float, strings unquoted).
+    """
+
+    shape: str
+    literals: tuple
+
+
+def fingerprint_sql(text: str) -> Fingerprint:
+    """Tokenize ``text`` into a shape key + literal vector, without parsing.
+
+    Canonicalization is deliberately conservative: whitespace is dropped by
+    the tokenizer, a trailing ``;`` is ignored, and the two legal clause
+    orders (``WHERE ... GROUP BY c`` vs ``GROUP BY c WHERE ...``) map to
+    one shape. Word tokens are kept verbatim (no case folding) — case
+    variants get separate templates rather than risking a collision with
+    an identifier that shadows a keyword.
+    """
+    tokens = _tokenize(text)
+    if tokens and tokens[-1] == ("punc", ";"):
+        tokens = tokens[:-1]
+    # Grammar fixes tokens 0..6 as: SELECT f ( col ) FROM table.  When a
+    # GROUP BY clause precedes WHERE, swap them so both orders share a
+    # shape.  (Malformed inputs just keep their literal token order — they
+    # fail identically at parse time either way.)
+    if (len(tokens) > 10
+            and tokens[7][0] == "word" and tokens[7][1].upper() == "GROUP"
+            and tokens[8][0] == "word" and tokens[8][1].upper() == "BY"
+            and tokens[9][0] == "word"
+            and tokens[10][0] == "word" and tokens[10][1].upper() == "WHERE"):
+        tokens = tokens[:7] + tokens[10:] + tokens[7:10]
+    parts, literals = [], []
+    for kind, val in tokens:
+        if kind in ("num", "str"):
+            parts.append("?")
+            literals.append(val)
+        else:
+            parts.append(str(val))
+    return Fingerprint(" ".join(parts), tuple(literals))
+
+
+_PARSE_CALLS = 0
+
+
+def parse_calls() -> int:
+    """Total ``parse_sql`` invocations (process-wide, monotonic).
+
+    The ``--plan-smoke`` lane asserts this counter does not move across a
+    template-hit burst — the zero-parse guarantee, checked by counting
+    rather than timing.
+    """
+    return _PARSE_CALLS
+
+
 def _tokenize(text: str):
-    tokens, pos = [], 0
-    while pos < len(text):
-        if text[pos:].strip() == "":
-            break
+    # Hot path: fingerprint_sql runs this per submitted query, so the loop
+    # avoids per-token remainder slices and groupdict scans — whitespace is
+    # skipped char-wise and the matched alternative read off ``lastgroup``
+    # (every named group is top-level, so it is always the one that fired).
+    tokens, pos, n = [], 0, len(text)
+    append = tokens.append
+    while pos < n:
+        if text[pos] in _WHITESPACE:
+            pos += 1
+            continue
         m = _TOKEN_RE.match(text, pos)
         if not m:
             raise SQLError(f"cannot tokenize at: {text[pos:pos+25]!r}")
         pos = m.end()
-        kind = next((k for k, v in m.groupdict().items() if v is not None), None)
-        if kind is None:
-            continue
-        val = m.group(kind)
+        kind = m.lastgroup
+        val = m.group(m.lastindex)
         if kind == "num":
-            tokens.append(("num", float(val)))
+            append(("num", float(val)))
         elif kind == "str":
-            tokens.append(("str", val[1:-1]))
-        elif kind == "word":
-            tokens.append(("word", val))
+            append(("str", val[1:-1]))
         else:
-            tokens.append((kind, val))
+            append((kind, val))
     return tokens
 
 
@@ -150,6 +215,8 @@ class _Parser:
 
 
 def parse_sql(text: str) -> ParsedQuery:
+    global _PARSE_CALLS
+    _PARSE_CALLS += 1
     p = _Parser(_tokenize(text))
     p.expect_word("SELECT")
     kind, func = p.next()

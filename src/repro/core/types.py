@@ -154,7 +154,10 @@ class ColumnInfo:
                 return float("nan")  # unseen literal: matches nothing
         # Clear float noise (10.22*100 -> 1022.0000000000001) but keep
         # off-grid literals (e.g. "> 18.65" with scale 10) intact.
-        return round(float(value) * self.scale - self.offset, 6)
+        # np.round rather than builtin round so the scalar path and the
+        # template batch-bind path (np.round over a literal matrix) share
+        # one rounding algorithm elementwise — bit-for-bit by construction.
+        return float(np.round(float(value) * self.scale - self.offset, 6))
 
     def decode(self, value: float):
         """Pre-processed domain -> raw domain (for result reporting)."""

@@ -193,7 +193,7 @@ class QueryTrace:
 
     __slots__ = ("qid", "t_submit", "t_planned", "t_admitted", "t_drained",
                  "t_exec0", "t_exec1", "t_resolved", "plan_cache_hit",
-                 "result_cache_hit", "drain_cause", "wave_size",
+                 "result_cache_hit", "plan_path", "drain_cause", "wave_size",
                  "kernel_share_s", "batched", "retries", "rejected")
 
     def __init__(self, t_submit: float | None = None):
@@ -208,6 +208,10 @@ class QueryTrace:
         self.t_resolved = None
         self.plan_cache_hit = False
         self.result_cache_hit = False
+        # Which planner path produced the plan: "full" (cold parse+plan),
+        # "template" (zero-parse template bind), "plan_cache" (exact-text
+        # plan-cache hit), or None (never planned, e.g. result-cache hit).
+        self.plan_path = None
         self.drain_cause = None
         self.wave_size = 0
         self.kernel_share_s = 0.0
@@ -242,6 +246,7 @@ class QueryTrace:
         out["kernel_share_ms"] = self.kernel_share_s * 1e3
         out["plan_cache_hit"] = self.plan_cache_hit
         out["result_cache_hit"] = self.result_cache_hit
+        out["plan_path"] = self.plan_path
         out["batched"] = self.batched
         out["wave_size"] = self.wave_size
         out["drain_cause"] = self.drain_cause
@@ -257,6 +262,8 @@ class QueryTrace:
         attrs = {"qid": self.qid}
         if label:
             attrs["sql"] = label
+        if self.plan_path is not None:
+            attrs["plan_path"] = self.plan_path
         prev = self.t_submit
         for stage, field in _STAGES:
             t = getattr(self, field)

@@ -212,8 +212,13 @@ class AdmissionMetrics:
 
 
 # The EXPLAIN stage keys StageMetrics aggregates (matches
-# ``repro.obs.trace.QueryTrace.explain`` stage names).
-_STAGE_KEYS = ("plan", "admit", "queue", "assemble", "execute", "resolve")
+# ``repro.obs.trace.QueryTrace.explain`` stage names). The two
+# ``plan_*`` keys split the plan stage by planner path: a traced query's
+# ``plan_ms`` additionally lands in ``plan_full`` (cold parse+plan) or
+# ``plan_template_hit`` (zero-parse template bind / plan-cache hit)
+# according to its ``plan_path`` label.
+_STAGE_KEYS = ("plan", "admit", "queue", "assemble", "execute", "resolve",
+               "plan_template_hit", "plan_full")
 
 
 class StageMetrics:
@@ -232,6 +237,11 @@ class StageMetrics:
                 ms = explain.get(f"{key}_ms")
                 if ms is not None:
                     res.add(ms / 1e3)
+            path = explain.get("plan_path")
+            plan_ms = explain.get("plan_ms")
+            if path is not None and plan_ms is not None:
+                split = "plan_full" if path == "full" else "plan_template_hit"
+                self._stages[split].add(plan_ms / 1e3)
 
     def snapshot(self) -> dict:
         """Per-stage ``{"p50_ms", "p99_ms"}`` plus the explained count."""
@@ -265,7 +275,8 @@ class Metrics:
         """One traced query's stage breakdown -> stage-latency reservoirs."""
         self.stages.record_explain(explain)
 
-    def snapshot(self, plan_cache=None, result_cache=None) -> dict:
+    def snapshot(self, plan_cache=None, result_cache=None,
+                 template_cache=None) -> dict:
         """Full telemetry snapshot: ``{"tables", "totals"}`` (see
         ``docs/serving.md`` for every field)."""
         with self._lock:
@@ -284,4 +295,6 @@ class Metrics:
             totals["plan_cache"] = plan_cache.stats()
         if result_cache is not None:
             totals["result_cache"] = result_cache.stats()
+        if template_cache is not None:
+            totals["template_cache"] = template_cache.stats()
         return {"tables": out, "totals": totals}

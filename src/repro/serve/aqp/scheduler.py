@@ -37,6 +37,7 @@ Execution modes:
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import dataclasses
 import threading
 import time
@@ -87,6 +88,33 @@ class DrainStats:
 
 
 SHED_POLICIES = ("reject", "shed_oldest", "block")
+
+
+class PlannerPool:
+    """Optional planner offload: cold planning runs off the submit thread.
+
+    A thin, swappable wrapper over a thread pool. On today's GIL-bound
+    CPython a thread pool mostly buys submit-path *latency* (the submitter
+    returns a pending future instead of planning inline); the interface —
+    ``submit(fn, *args) -> future``, ``close()`` — is deliberately the
+    executor protocol so a free-threaded or subprocess executor can drop
+    in without touching the server (``AQPServer(planner_workers=N)``).
+    """
+
+    def __init__(self, workers: int):
+        if workers <= 0:
+            raise ValueError("PlannerPool needs workers >= 1")
+        self.workers = int(workers)
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=self.workers, thread_name_prefix="aqp-planner")
+
+    def submit(self, fn, *args) -> concurrent.futures.Future:
+        """Schedule ``fn(*args)`` on a planner worker; returns its future."""
+        return self._pool.submit(fn, *args)
+
+    def close(self):
+        """Stop accepting work and join the workers (pending plans finish)."""
+        self._pool.shutdown(wait=True)
 
 
 class StreamingAdmission:

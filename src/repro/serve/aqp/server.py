@@ -2,12 +2,26 @@
 
 Pipeline per submitted SQL string (``submit`` -> ``QueryFuture``):
 
-    normalize -> plan cache -> result cache -> in-flight dedupe -> enqueue
-       |            |              |                                  |
-       |       (epoch-keyed   (epoch-keyed;                   StreamingAdmission
-       |        QueryPlans)    GROUP BY adds                  drains plan-shape
-       v                       per-leaf entries)              waves -> futures
+    normalize -> plan cache -> template cache -> result cache -> dedupe -> enqueue
+       |            |              |                                          |
+       |       (epoch-keyed   (epoch-keyed                           StreamingAdmission
+       |        QueryPlans)    PlanTemplates:                        drains plan-shape
+       v                       zero-parse shape hits)                waves -> futures
     FROM <table> resolved via TableCatalog (PlanError if unknown)
+
+**Planner fast path** (zero-parse templating): when ``plan_templates`` is
+on, a submission that misses the exact-text plan cache is fingerprinted
+(``sql.fingerprint_sql`` — a tokenizer pass, no parse) into a
+literal-stripped shape key + literal vector. A shape that hits the
+epoch-keyed template cache skips ``parse_sql``/``plan_query`` entirely:
+the submission carries ``(template, literals)`` with ``plan=None`` and the
+admission worker binds every such submission of a wave in one
+``PlanTemplate.bind_batch`` call per template — literal encoding for the
+whole wave is a single numpy pass. Bound plans are bit-for-bit equal to
+the cold path's (asserted by tests and the ``--plan-smoke`` lane). Cold
+shapes plan as before and compile + cache their template as a side effect;
+with ``planner_workers > 0`` that cold planning runs on a small planner
+pool so the submit path never blocks on a parse.
 
 ``submit`` enqueues immediately and returns a future; the admission worker
 drains the queue into execution waves under a ``max_wait_ms`` /
@@ -70,7 +84,8 @@ from repro.obs.trace import QueryTrace, Tracer
 from repro.serve.aqp.cache import LRUCache, normalize_sql
 from repro.serve.aqp.catalog import TableCatalog
 from repro.serve.aqp.metrics import Metrics
-from repro.serve.aqp.scheduler import BatchScheduler, StreamingAdmission
+from repro.serve.aqp.scheduler import (BatchScheduler, PlannerPool,
+                                       StreamingAdmission)
 
 
 class QueryFuture(concurrent.futures.Future):
@@ -90,11 +105,16 @@ class QueryFuture(concurrent.futures.Future):
 
 @dataclasses.dataclass
 class _Submission:
-    """One enqueued (not yet executed) query and its attached futures."""
+    """One enqueued (not yet executed) query and its attached futures.
+
+    ``plan`` may be None for a template-cache hit: the submission then
+    carries ``(template, literals)`` and the admission worker binds the
+    plan at wave time (one ``bind_batch`` per template per wave).
+    """
 
     norm: str
     table: str
-    plan: QueryPlan
+    plan: QueryPlan | None
     epoch: int                       # table epoch captured at planning time
     t_submit: float
     futures: list                    # [QueryFuture]; index 0 is the primary
@@ -102,6 +122,8 @@ class _Submission:
     cached_leaves: dict = dataclasses.field(default_factory=dict)
     retries: int = 0                 # stale-epoch re-enqueues (bounded)
     trace: QueryTrace | None = None  # per-query trace (tracing enabled only)
+    template: object = None          # PlanTemplate (deferred-bind hits only)
+    literals: tuple | None = None    # fingerprint literal vector (ditto)
 
 
 def _leaf_key(plan: QueryPlan) -> str:
@@ -121,6 +143,12 @@ class AQPServer:
         mode: scheduler execution mode — ``"pallas"`` / ``"ref"`` /
             ``"numpy"`` / ``None`` (auto; see ``scheduler.BatchScheduler``).
         plan_cache_size / result_cache_size: LRU capacities (entries).
+        plan_templates: zero-parse planner fast path (default on) — see
+            the module docstring; ``docs/serving.md`` has the architecture.
+        template_cache_size: ``PlanTemplate`` LRU capacity (shapes).
+        planner_workers: > 0 offloads *cold* planning to a
+            ``scheduler.PlannerPool`` of that many workers, so the submit
+            path never blocks on a parse (0 = plan inline, the default).
         max_result_bytes: approximate byte budget for the result cache
             (``<= 0`` = entries-only bounding); the LRU end evicts until
             the estimated footprint fits (``cache.LRUCache``).
@@ -169,6 +197,9 @@ class AQPServer:
                  mode: str | None = None,
                  plan_cache_size: int = 4096,
                  result_cache_size: int = 16384,
+                 plan_templates: bool = True,
+                 template_cache_size: int = 512,
+                 planner_workers: int = 0,
                  max_result_bytes: int = 0,
                  max_group: int = 256, min_group: int = 2,
                  max_wait_ms: float = 2.0, max_batch: int = 64,
@@ -195,6 +226,12 @@ class AQPServer:
         self.plan_cache = LRUCache(plan_cache_size)
         self.result_cache = LRUCache(result_cache_size,
                                      max_bytes=max_result_bytes)
+        # Zero-parse fast path: fingerprint-shape -> PlanTemplate, epoch-
+        # keyed like the plan cache and guarded by the same _plan_lock.
+        self.plan_templates = bool(plan_templates)
+        self.template_cache = LRUCache(template_cache_size)
+        self._planner = (PlannerPool(planner_workers)
+                         if planner_workers > 0 else None)
         self.metrics = Metrics()
         self.retry_timeout_s = float(retry_timeout_s)
         self.single_lock = bool(single_lock)
@@ -244,9 +281,12 @@ class AQPServer:
         self._purge(name)
 
     def close(self):
-        """Shut down: drain+stop the admission worker, then detach every
-        framework callback so a discarded server is not kept alive (and
-        purged into) by long-lived frameworks."""
+        """Shut down: join the planner pool (pending cold plans enqueue or
+        fail their futures), drain+stop the admission worker, then detach
+        every framework callback so a discarded server is not kept alive
+        (and purged into) by long-lived frameworks."""
+        if self._planner is not None:
+            self._planner.close()
         self.admission.close()
         for name, (fw, cb) in list(self._wiring.items()):
             fw.off_invalidate(cb)
@@ -257,6 +297,7 @@ class AQPServer:
         # across the two caches — each entry validates its epoch anyway.
         with self._plan_lock:
             self.plan_cache.purge_table(name)
+            self.template_cache.purge_table(name)
         with self._state_lock:
             self.result_cache.purge_table(name)
 
@@ -356,22 +397,83 @@ class AQPServer:
 
     def _plan_admit(self, fut: QueryFuture, norm: str, t_submit: float,
                     trace: QueryTrace | None = None) -> _Submission | None:
-        """Plan ``norm``, then admit it under a short state-lock section.
+        """Plan ``norm`` (fast path first), then admit it.
 
-        Returns the ``_Submission`` the caller should enqueue, or None when
-        the future was settled inline (planning error, result-cache hit,
-        fully-cached GROUP BY) or attached to a submission another thread
-        planned concurrently. Future resolution happens after the lock is
-        released.
+        Resolution order: exact-text plan cache -> template cache (zero
+        parse; the plan bind is deferred to the wave) -> cold planning —
+        inline, or on the planner pool when ``planner_workers > 0`` (the
+        pool job admits AND enqueues; this call then returns None with the
+        future pending). Returns the ``_Submission`` the caller should
+        enqueue, or None when the future was settled inline / handed off.
         """
+        fast = self._plan_fast(norm)
+        if fast is not None:
+            return self._admit(fut, norm, t_submit, trace, *fast)
+        if self._planner is not None:
+            self._planner.submit(self._plan_async, fut, norm, t_submit,
+                                 trace)
+            return None
+        return self._plan_cold_admit(fut, norm, t_submit, trace)
+
+    def _plan_fast(self, norm: str):
+        """Lock-cheap planner fast path: exact-text plan-cache hit, else
+        template-cache hit on the literal-stripped fingerprint shape (no
+        ``parse_sql`` on either). Returns admit args or None (plan cold).
+        """
+        with self._plan_lock:
+            entry = self.plan_cache.get(norm, self.catalog.epoch)
+        if entry is not None:
+            return (entry.table, entry.value, entry.epoch, "plan_cache",
+                    None, None)
+        if not self.plan_templates:
+            return None
         try:
-            table, plan, epoch, plan_cached = self._plan_for(norm)
+            fp = sqlmod.fingerprint_sql(norm)
+        except sqlmod.SQLError:
+            return None          # untokenizable: let the cold parse raise
+        with self._plan_lock:
+            tentry = self.template_cache.get(fp.shape, self.catalog.epoch)
+            if tentry is None:
+                self.template_cache.miss(None)
+        if tentry is not None and tentry.value.n_slots == len(fp.literals):
+            return (tentry.table, None, tentry.epoch, "template",
+                    tentry.value, fp.literals)
+        return None
+
+    def _plan_cold_admit(self, fut: QueryFuture, norm: str, t_submit: float,
+                         trace: QueryTrace | None) -> _Submission | None:
+        """Cold-plan ``norm`` (parse + plan + template compile), then admit."""
+        try:
+            table, plan, epoch = self._plan_cold(norm)
         except Exception as exc:          # PlanError / stale RuntimeError
             fut.set_exception(exc)
             return None
+        return self._admit(fut, norm, t_submit, trace, table, plan, epoch,
+                           "full", None, None)
+
+    def _plan_async(self, fut: QueryFuture, norm: str, t_submit: float,
+                    trace: QueryTrace | None):
+        """Planner-pool job: cold-plan, admit, enqueue (worker thread)."""
+        sub = self._plan_cold_admit(fut, norm, t_submit, trace)
+        if sub is not None:
+            self._enqueue(sub)
+
+    def _admit(self, fut: QueryFuture, norm: str, t_submit: float,
+               trace: QueryTrace | None, table: str,
+               plan: QueryPlan | None, epoch: int, path: str,
+               template, literals) -> _Submission | None:
+        """Admit a planned (or template-deferred) query under a short
+        state-lock section.
+
+        Returns the ``_Submission`` the caller should enqueue, or None when
+        the future was settled inline (result-cache hit, fully-cached
+        GROUP BY) or attached to a submission another thread planned
+        concurrently. Future resolution happens after the lock is released.
+        """
         if trace is not None:
             trace.t_planned = time.perf_counter()
-            trace.plan_cache_hit = plan_cached
+            trace.plan_cache_hit = path == "plan_cache"
+            trace.plan_path = path
         hit = None
         with self._state_lock:
             inflight = self._inflight.get(norm)
@@ -385,8 +487,9 @@ class AQPServer:
             else:
                 self.result_cache.miss(table)
                 sub = _Submission(norm, table, plan, epoch, t_submit, [fut],
-                                  trace=trace)
-                if plan.leaf_plans:
+                                  trace=trace, template=template,
+                                  literals=literals)
+                if plan is not None and plan.leaf_plans:
                     self._lookup_leaves(sub)
                     if not sub.missing:   # every leaf served from cache
                         hit = self._finish_cached_group(sub)
@@ -449,9 +552,10 @@ class AQPServer:
             fut.set_result(AdmissionRejected(reason=reason,
                                              queue_depth=depth))
 
-    def _plan_for(self, norm: str):
-        """Plan (via cache) -> (table, plan, epoch the plan is valid at,
-        cache-hit flag).
+    def _plan_cold(self, norm: str):
+        """Cold planning: parse + plan -> (table, plan, epoch). Compiles and
+        caches the shape's ``PlanTemplate`` as a side effect, so the next
+        query of this shape skips the parse entirely.
 
         Engine and epoch come from one atomic ``catalog.snapshot``, so the
         plan is tagged with exactly the epoch of the synopsis its literals
@@ -459,25 +563,31 @@ class AQPServer:
         produce a plan that validates (in the caches or at wave execution)
         against a synopsis it was not planned for.
 
-        Only the plan-cache get/put take ``_plan_lock``; the planning work
-        itself (parse + encode + GROUP BY leaf expansion) runs unlocked, so
-        concurrent submitters planning *different* queries overlap. Two
-        threads planning the *same* query race benignly: both plans are
-        identical and the puts are idempotent.
+        Only the cache get/puts take ``_plan_lock``; the planning work
+        itself (parse + encode + GROUP BY leaf expansion + template
+        compile) runs unlocked, so concurrent submitters planning
+        *different* queries overlap. Two threads planning the *same* query
+        race benignly: both plans are identical and the puts are
+        idempotent.
         """
-        with self._plan_lock:
-            entry = self.plan_cache.get(norm, self.catalog.epoch)
-            if entry is not None:
-                return entry.table, entry.value, entry.epoch, True
         parsed = sqlmod.parse_sql(norm)
         table = parsed.table
         with self._plan_lock:
             self.plan_cache.miss(table if table in self.catalog else None)
         engine, epoch = self.catalog.snapshot(table)  # PlanError/RuntimeError
         plan = engine.plan_query(parsed)
+        template = fp = None
+        if self.plan_templates:
+            try:
+                template = engine.plan_template(parsed)
+                fp = sqlmod.fingerprint_sql(norm)
+            except Exception:
+                template = None   # shape not templatable: plan cold next time
         with self._plan_lock:
             self.plan_cache.put(norm, table, epoch, plan)
-        return table, plan, epoch, False
+            if template is not None and template.n_slots == len(fp.literals):
+                self.template_cache.put(fp.shape, table, epoch, template)
+        return table, plan, epoch
 
     def _lookup_leaves(self, sub: _Submission):
         """Fill ``sub.cached_leaves`` / ``sub.missing`` from the result cache
@@ -496,19 +606,27 @@ class AQPServer:
     def _replan(self, sub: _Submission):
         """The table changed while ``sub`` sat in the admission queue: its
         plan may encode literals against a synopsis that no longer exists.
-        Re-plan against the current synopsis (plan cache was purged by the
-        epoch bump) and refresh the per-leaf cache lookups; raises the
-        usual PlanError/RuntimeError if the table is gone or stale."""
-        sub.table, sub.plan, sub.epoch, _cached = self._plan_for(sub.norm)
+        Re-plan against the current synopsis (plan + template caches were
+        purged by the epoch bump — always the cold path, which recompiles
+        the shape's template) and refresh the per-leaf cache lookups;
+        raises the usual PlanError/RuntimeError if the table is gone or
+        stale."""
+        sub.table, sub.plan, sub.epoch = self._plan_cold(sub.norm)
+        sub.template = sub.literals = None   # concrete plan supersedes
         sub.missing = None
         if sub.plan.leaf_plans:
             with self._state_lock:
                 self._lookup_leaves(sub)
 
-    def _finish_cached_group(self, sub: _Submission) -> QueryResult:
+    def _finish_cached_group(self, sub: _Submission,
+                             result: QueryResult | None = None) -> QueryResult:
         """GROUP BY answered entirely from per-leaf cache entries (state
-        lock held); returns the assembled result for the caller to set."""
-        result = assemble_groups(sub.plan, sub.cached_leaves)
+        lock held); returns the assembled result for the caller to set.
+        ``result`` carries a pre-assembled answer from the wave path (a
+        deferred template bind learns its leaves are all cached only after
+        binding) so assembly is never repeated under the lock."""
+        if result is None:
+            result = assemble_groups(sub.plan, sub.cached_leaves)
         tm = self.metrics.table(sub.table)
         tm.record_result_hit()
         tm.record_group_expansion(0, len(sub.cached_leaves))
@@ -569,6 +687,44 @@ class AQPServer:
                     self._replan(sub)
                 except Exception as exc:
                     prefailed[id(sub)] = exc
+
+        # Deferred template binds: every template-hit submission of the
+        # wave still carries (template, literals). Group them by template
+        # and bind each group in ONE bind_batch call — the wave's literal
+        # encoding collapses into a single numpy pass per shape. A bad
+        # literal isolates to its own submission (per-sub scalar bind on
+        # group failure), never poisoning the rest of the group.
+        by_template: dict[int, list] = {}
+        for sub in batch:
+            if id(sub) not in prefailed and sub.plan is None:
+                by_template.setdefault(id(sub.template), []).append(sub)
+        bound_groups = []
+        for subs in by_template.values():
+            template = subs[0].template
+            try:
+                plans = template.bind_batch([s.literals for s in subs])
+            except Exception:
+                plans = None
+            if plans is None:          # isolate: per-sub scalar bind
+                for s in subs:
+                    try:
+                        s.plan = template.bind(s.literals)
+                    except Exception as exc:
+                        prefailed[id(s)] = exc
+            else:
+                for s, p in zip(subs, plans):
+                    s.plan = p
+            for s in subs:
+                if id(s) not in prefailed:
+                    if s.plan.leaf_plans:
+                        bound_groups.append(s)
+                    with self._plan_lock:   # exact-text repeats skip the bind
+                        self.plan_cache.put(s.norm, s.table, s.epoch, s.plan)
+        if bound_groups:
+            # GROUP BY leaf-cache lookups were deferred along with the bind.
+            with self._state_lock:
+                for s in bound_groups:
+                    self._lookup_leaves(s)
 
         items, slots = [], []          # slots: (submission, leaf_idx | None)
         for sub in batch:
@@ -666,7 +822,15 @@ class AQPServer:
                 self._inflight.pop(sub.norm, None)
                 futures = list(sub.futures)
                 if err is None:
-                    if sub.plan.leaf_plans:
+                    if sub.plan.leaf_plans and not executed \
+                            and not sub.missing:
+                        # Deferred-bind GROUP BY whose leaves were ALL in
+                        # the cache: account as a result hit, exactly like
+                        # the submit-time fully-cached fast path (a plan
+                        # known at submit never reaches the wave in this
+                        # state — it resolves there instead).
+                        result = self._finish_cached_group(sub, result)
+                    elif sub.plan.leaf_plans:
                         self._finish_group(sub, executed, result)
                     else:
                         sr = direct[id(sub)]
@@ -728,9 +892,11 @@ class AQPServer:
         caches may be mutually a submit apart, which telemetry tolerates."""
         with self._plan_lock:
             plan_stats = self.plan_cache.stats()
+            tmpl_stats = self.template_cache.stats()
         with self._state_lock:
             snap = self.metrics.snapshot(None, self.result_cache)
         snap["totals"]["plan_cache"] = plan_stats
+        snap["totals"]["template_cache"] = tmpl_stats
         adm = snap["totals"]["admission"]
         adm["queue_depth"] = self.admission.depth()
         # The admission object tracks depth after every admit; the metrics

@@ -1,7 +1,7 @@
-"""SQL subset parser."""
+"""SQL subset parser + template fingerprints."""
 import pytest
 
-from repro.core.sql import SQLError, parse_sql
+from repro.core.sql import SQLError, fingerprint_sql, parse_calls, parse_sql
 
 
 def test_basic():
@@ -41,3 +41,77 @@ def test_errors():
         parse_sql("SELECT AVG(x) FROM t WHERE x >")
     with pytest.raises(SQLError):
         parse_sql("AVG(x) FROM t")
+
+
+# ------------------------------------------------------------- fingerprints
+
+
+def test_fingerprint_strips_literals():
+    fp = fingerprint_sql(
+        "SELECT COUNT(*) FROM t WHERE a > 5 AND b = 'EU' OR c <= 2.5")
+    assert fp.literals == (5.0, "EU", 2.5)
+    assert "?" in fp.shape and "5" not in fp.shape and "EU" not in fp.shape
+
+
+def test_fingerprint_same_shape_different_literals():
+    a = fingerprint_sql("SELECT SUM(x) FROM t WHERE a > 1 AND b < 2")
+    b = fingerprint_sql("SELECT SUM(x) FROM t WHERE a > 9.75 AND b < -40")
+    assert a.shape == b.shape
+    assert a.literals != b.literals
+
+
+def test_fingerprint_negative_and_scientific_literals():
+    # Negative literals and scientific notation are single num tokens, so
+    # they strip to the same placeholder as a plain integer.
+    base = fingerprint_sql("SELECT MIN(v) FROM t WHERE v > 3")
+    for lit in ("-7", "-7.25", "1.5e3", "2E-2", "-1e+4"):
+        fp = fingerprint_sql(f"SELECT MIN(v) FROM t WHERE v > {lit}")
+        assert fp.shape == base.shape, lit
+        assert fp.literals == (float(lit),)
+
+
+def test_fingerprint_quoted_strings_with_digits():
+    # Digits inside quoted literals must strip with the string, never
+    # tokenize as numbers: the shape stays literal-free.
+    a = fingerprint_sql("SELECT COUNT(*) FROM t WHERE city = 'NY 10001'")
+    b = fingerprint_sql('SELECT COUNT(*) FROM t WHERE city = "Area 51"')
+    assert a.shape == b.shape
+    assert a.literals == ("NY 10001",)
+    assert b.literals == ("Area 51",)
+    assert "10001" not in a.shape and "51" not in b.shape
+
+
+def test_fingerprint_whitespace_and_semicolon_variants():
+    a = fingerprint_sql("SELECT AVG(x) FROM t WHERE a > 1 AND b < 2")
+    b = fingerprint_sql("  SELECT  AVG( x )\nFROM t\tWHERE a>3 AND b<4 ; ")
+    assert a.shape == b.shape
+
+
+def test_fingerprint_clause_order_variants():
+    a = fingerprint_sql(
+        "SELECT COUNT(*) FROM t WHERE a > 1 GROUP BY g")
+    b = fingerprint_sql(
+        "SELECT COUNT(*) FROM t GROUP BY g WHERE a > 2")
+    assert a.shape == b.shape
+    assert a.literals == (1.0,) and b.literals == (2.0,)
+
+
+def test_fingerprint_distinct_shapes_stay_distinct():
+    # Different columns, operators, or aggregation functions are different
+    # shapes — only literal values may differ within one template.
+    shapes = {fingerprint_sql(s).shape for s in (
+        "SELECT COUNT(*) FROM t WHERE a > 1",
+        "SELECT COUNT(*) FROM t WHERE b > 1",
+        "SELECT COUNT(*) FROM t WHERE a >= 1",
+        "SELECT SUM(a) FROM t WHERE a > 1",
+        "SELECT COUNT(*) FROM u WHERE a > 1",
+    )}
+    assert len(shapes) == 5
+
+
+def test_parse_calls_counter_is_monotonic():
+    before = parse_calls()
+    fingerprint_sql("SELECT COUNT(*) FROM t WHERE a > 1")   # no parse
+    assert parse_calls() == before
+    parse_sql("SELECT COUNT(*) FROM t WHERE a > 1")
+    assert parse_calls() == before + 1
