@@ -2,6 +2,8 @@
 round-trip integrity + Golomb sparse-vs-dense selection stats."""
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from benchmarks.common import emit, save_json
@@ -17,18 +19,26 @@ def run(rows: list, quick: bool = False):
         table = load(name, n=100_000)
         fw = AQPFramework(BuildParams(n_samples=50_000)).ingest(table)
         rep = storage.synopsis_size_report(fw.synopsis)
+        t0 = time.perf_counter()
         blob = storage.encode(fw.synopsis)
+        encode_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
         ph2 = storage.decode(blob)
+        decode_ms = (time.perf_counter() - t0) * 1e3
         roundtrip = all(
             np.allclose(h1.h, h2.h) and np.allclose(h1.edges, h2.edges)
             for h1, h2 in zip(fw.synopsis.hists, ph2.hists))
         rep["roundtrip_ok"] = roundtrip
         rep["ratio_vs_eq12"] = rep["total"] / max(rep["eq12_bound"], 1)
+        rep["encode_ms"] = encode_ms
+        rep["decode_ms"] = decode_ms
         out[name] = rep
         emit(rows, f"storage/{name}/encoded", None, f"{rep['total']}B")
         emit(rows, f"storage/{name}/vs_eq12_bound", None,
              f"{rep['ratio_vs_eq12']:.2f}x")
         emit(rows, f"storage/{name}/roundtrip", None, str(roundtrip))
+        emit(rows, f"storage/{name}/codec", None,
+             f"encode {encode_ms:.1f} ms / decode {decode_ms:.1f} ms")
     save_json("storage", out)
     return out
 

@@ -5,8 +5,8 @@
 #      (modules, public classes, public functions/methods);
 #   3. a BuildParams / serving knob appearing in zero or in more than one
 #      reference doc under docs/ (every knob must have exactly one home:
-#      construction knobs in docs/construction.md, serving knobs in
-#      docs/serving.md).
+#      construction knobs in docs/construction.md, compression knobs in
+#      docs/compression.md, serving knobs in docs/serving.md).
 #
 # Wired into scripts/tier1.sh and exercised by tests/test_docs.py, so the
 # plain ROADMAP tier-1 command enforces it too.
@@ -74,7 +74,10 @@ def class_fields(path, cls):
                     and isinstance(st.target, ast.Name)]
     raise SystemExit(f"cannot find {cls} in {path}")
 
-build_knobs = class_fields("src/repro/core/types.py", "BuildParams")
+compression_knobs = ["from_compressed", "seed_from_bases"]
+build_knobs = [k for k in class_fields("src/repro/core/types.py",
+                                       "BuildParams")
+               if k not in compression_knobs]
 serving_knobs = ["mode", "plan_cache_size", "result_cache_size",
                  "max_result_bytes", "max_group", "min_group",
                  "max_wait_ms", "max_batch", "max_queue_depth",
@@ -83,6 +86,7 @@ serving_knobs = ["mode", "plan_cache_size", "result_cache_size",
 obs_knobs = ["trace_enabled", "trace_buffer", "slow_query_ms"]
 docs = {p: p.read_text() for p in sorted(ROOT.glob("docs/*.md"))}
 for knob, home in ([(k, "construction") for k in build_knobs]
+                   + [(k, "compression") for k in compression_knobs]
                    + [(k, "serving") for k in serving_knobs]
                    + [(k, "observability") for k in obs_knobs]):
     pat = re.compile(rf"`{re.escape(knob)}`")

@@ -1,0 +1,118 @@
+"""Tier-1 GD pipeline smoke lane (``scripts/tier1.sh --gd-smoke``).
+
+End-to-end check of the GD-native compressed pipeline (PR 8):
+
+  1. compress a tiny redundant table with GreedyGD and assert the
+     compression ratio is > 1 (bases/deviations split actually pays);
+  2. build the synopsis **directly from the CompressedTable** — assert the
+     build decoded only the N_s sampled rows (``rows_decoded`` stat) and
+     is bit-identical to the raw build with ``seed_edges`` passed in;
+  3. encode to a bit-packed blob, ``register_cold`` it on an ``AQPServer``
+     and serve: the first query decodes exactly once, the second reuses
+     the decoded engine (decode-once counter), and the epoch is stable
+     across the decode;
+  4. GD-native ``rebuild`` bumps the epoch, purges the result cache, and
+     the rebuilt table still answers; cold telemetry (synopsis bytes,
+     decode ms) lands in ``stats()``.
+
+Writes nothing; exits non-zero on any failure.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import storage
+from repro.core.build import build_pairwise_hist
+from repro.core.types import BuildParams
+from repro.gd.greedygd import GreedyGD
+from repro.gd.preprocess import preprocess_table
+from repro.serve.aqp import AQPServer
+
+
+def _table(n=12_000):
+    rng = np.random.default_rng(7)
+    return {
+        "a": rng.integers(0, 12, n).astype(float) * 500,   # few bases
+        "b": np.round(rng.normal(800, 4, n)),              # narrow spread
+        "c": rng.integers(0, 6, n).astype(float),
+    }
+
+
+def main() -> int:
+    pp = preprocess_table(_table())
+    ct = GreedyGD().compress(pp.data)
+    ratio = ct.raw_size_bytes() / ct.size_bytes()
+    if ratio <= 1.0:
+        print(f"FAIL: compression ratio {ratio:.3f} <= 1")
+        return 1
+    print(f"compress: OK (ratio {ratio:.2f}x, "
+          f"{ct.raw_size_bytes()} -> {ct.size_bytes()} bytes)")
+
+    params = BuildParams(n_samples=5_000, seed=3)
+    ph = build_pairwise_hist(ct, pp.columns, params)
+    if not ph.build_stats.get("from_compressed"):
+        print("FAIL: build did not take the compressed path")
+        return 1
+    decoded = ph.build_stats.get("rows_decoded")
+    if decoded != 5_000 or decoded >= ct.n_rows:
+        print(f"FAIL: expected 5000 sampled rows decoded, got {decoded} "
+              f"(table has {ct.n_rows})")
+        return 1
+    raw = build_pairwise_hist(pp.data, pp.columns, params,
+                              seed_edges=GreedyGD.seed_edges(ct))
+    for h1, h2 in zip(ph.hists, raw.hists):
+        if not (np.array_equal(h1.edges, h2.edges)
+                and np.array_equal(h1.h, h2.h)):
+            print("FAIL: compressed build differs from raw+seed_edges build")
+            return 1
+    print(f"gd-native build: OK ({decoded}/{ct.n_rows} rows decoded, "
+          f"bit-identical to raw build)")
+
+    blob = storage.encode(ph)
+    srv = AQPServer(mode="numpy")
+    srv.register_cold("t", blob, compressed=ct, params=params)
+    cold = srv.catalog.resolve("t")
+    e0 = srv.catalog.epoch("t")
+    if cold.cold_info()["decoded"]:
+        print("FAIL: registration decoded the blob eagerly")
+        return 1
+    sql = "SELECT COUNT(*) FROM t WHERE a > 2000"
+    first = srv.query(sql)
+    if cold.decode_count != 1 or srv.catalog.epoch("t") != e0:
+        print(f"FAIL: first query: decode_count={cold.decode_count} "
+              f"(want 1), epoch {e0} -> {srv.catalog.epoch('t')}")
+        return 1
+    srv.query("SELECT AVG(b) FROM t WHERE c < 3")
+    if cold.decode_count != 1:
+        print(f"FAIL: second query re-decoded (count={cold.decode_count})")
+        return 1
+    st = srv.stats()["tables"]["t"]["cold"]
+    if st["synopsis_bytes"] != len(blob) or not st["decode_ms"]:
+        print(f"FAIL: cold telemetry incomplete: {st}")
+        return 1
+    print(f"cold serve: OK (decode-once, {len(blob)} blob bytes, "
+          f"{st['decode_ms']:.1f} ms decode, epoch stable)")
+
+    cold.rebuild()
+    if srv.catalog.epoch("t") <= e0:
+        print(f"FAIL: rebuild did not bump the epoch ({e0} -> "
+              f"{srv.catalog.epoch('t')})")
+        return 1
+    if len(srv.result_cache) != 0:
+        print("FAIL: rebuild left stale result-cache entries")
+        return 1
+    again = srv.query(sql)
+    if again.estimate is None or first.estimate is None:
+        print("FAIL: no estimate before/after rebuild")
+        return 1
+    srv.close()
+    print(f"rebuild: OK (epoch {e0} -> {cold.epoch}, caches purged, "
+          f"estimate {first.estimate:.0f} -> {again.estimate:.0f})")
+    print("gd smoke: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,6 +13,9 @@
 #   scripts/tier1.sh --plan-smoke  # planner smoke: zero parse_sql calls on
 #                                  # the template-hit path (counter-based)
 #                                  # + bit-for-bit hit-vs-cold plans
+#   scripts/tier1.sh --gd-smoke    # GD pipeline smoke: compress ->
+#                                  # build-from-compressed -> store ->
+#                                  # cold-serve, decode-once + ratio > 1
 set -euo pipefail
 cd "$(dirname "$0")/.."
 if [[ "${1:-}" == "--stress" ]]; then
@@ -34,6 +37,13 @@ if [[ "${1:-}" == "--plan-smoke" ]]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         timeout "${PLAN_SMOKE_BUDGET_S:-300}" \
         python scripts/plan_smoke.py "$@"
+    exit $?
+fi
+if [[ "${1:-}" == "--gd-smoke" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        timeout "${GD_SMOKE_BUDGET_S:-300}" \
+        python scripts/gd_smoke.py "$@"
     exit $?
 fi
 scripts/check_docs.sh

@@ -123,13 +123,18 @@ class AQPFramework:
         t0 = time.perf_counter()
         self.preprocessed = preprocess_table(table)
         t1 = time.perf_counter()
-        seed_edges = None
         if self.use_compression:
             self.compressed = self.gd.compress(self.preprocessed.data)
-            seed_edges = GreedyGD.seed_edges(self.compressed)
         t2 = time.perf_counter()
+        # GD-native construction: build directly from the compressed store —
+        # only the N_s sampled rows are decoded and the bases seed the 1-D
+        # edges (bit-for-bit equal to the raw+seed_edges path).
+        use_ct = self.use_compression and self.params.from_compressed
+        build_input = self.compressed if use_ct else self.preprocessed.data
+        seed_edges = (GreedyGD.seed_edges(self.compressed)
+                      if self.use_compression and not use_ct else None)
         self.synopsis = build_pairwise_hist(
-            self.preprocessed.data, self.preprocessed.columns, self.params,
+            build_input, self.preprocessed.columns, self.params,
             seed_edges=seed_edges)
         t3 = time.perf_counter()
         engine = QueryEngine(self.synopsis, fastpath=self.fastpath)
@@ -143,6 +148,29 @@ class AQPFramework:
             "build_pairs_s": stats.get("pair_phase_s", 0.0),
             "build_pair_mode": stats.get("mode", ""),
             "build_phase_s": dict(stats.get("phase_s", {})),
+            "build_from_compressed": bool(stats.get("from_compressed")),
+        })
+        return self
+
+    def ingest_compressed(self, compressed, columns) -> "AQPFramework":
+        """Ingest an already-compressed table: build the synopsis straight
+        from the ``CompressedTable`` (no raw matrix anywhere). ``columns``
+        is the ``ColumnInfo`` list from pre-processing; this is the cold
+        catalog's rebuild path."""
+        t0 = time.perf_counter()
+        self.compressed = compressed
+        self.preprocessed = None
+        self.synopsis = build_pairwise_hist(compressed, columns, self.params)
+        t1 = time.perf_counter()
+        engine = QueryEngine(self.synopsis, fastpath=self.fastpath)
+        stats = self.synopsis.build_stats
+        self._publish(engine, {
+            "preprocess_s": 0.0, "compress_s": 0.0,
+            "build_synopsis_s": t1 - t0,
+            "build_pairs_s": stats.get("pair_phase_s", 0.0),
+            "build_pair_mode": stats.get("mode", ""),
+            "build_phase_s": dict(stats.get("phase_s", {})),
+            "build_from_compressed": True,
         })
         return self
 

@@ -48,6 +48,7 @@ import numpy as np
 from repro.core import chi2 as chi2lib
 from repro.core import refine
 from repro.core.types import BuildParams, ColumnInfo, Hist1D, PairHist, PairwiseHist
+from repro.gd.greedygd import CompressedTable, GreedyGD, decompress_rows
 from repro.obs.timeline import BuildTimeline
 
 def _prep_columns(sample: np.ndarray):
@@ -541,18 +542,33 @@ def build_pairwise_hist(
     """Construct the synopsis from a pre-processed (N, d) float64 matrix.
 
     ``data`` is in the *pre-processed* (GD) domain: non-negative integers as
-    f64, NaN for missing. ``seed_edges`` (optional) are per-column initial
-    edge candidates — typically reconstructed GreedyGD bases (§3).
-    ``n_rows_full`` is N of the complete dataset when ``data`` is itself
-    already a sample of something larger (IDEBench-style scale-up).
+    f64, NaN for missing — or a ``CompressedTable``, in which case only the
+    N_s sampled rows are decoded (``decompress_rows``) and, with
+    ``params.seed_from_bases``, the 1-D edges are seeded from the
+    deduplicated bases (§3); the full raw matrix is never materialized.
+    Because sampling draws row *indices* from ``params.seed`` and the decode
+    is bit-exact, the compressed-input build is bit-for-bit identical to the
+    raw build with ``GreedyGD.seed_edges`` passed in. ``seed_edges``
+    (optional) are per-column initial edge candidates — typically
+    reconstructed GreedyGD bases (§3). ``n_rows_full`` is N of the complete
+    dataset when ``data`` is itself already a sample of something larger
+    (IDEBench-style scale-up).
 
     The input ``columns`` list is left untouched; the returned synopsis
     carries copies with per-column null counts filled in.
     """
     params = params or BuildParams()
-    data = np.asarray(data, np.float64)
-    n_total = int(data.shape[0]) if n_rows_full is None else int(n_rows_full)
-    d = data.shape[1]
+    ct = data if isinstance(data, CompressedTable) else None
+    if ct is not None:
+        n_input = ct.n_rows
+        d = ct.d
+        if seed_edges is None and params.seed_from_bases:
+            seed_edges = GreedyGD.seed_edges(ct)
+    else:
+        data = np.asarray(data, np.float64)
+        n_input = int(data.shape[0])
+        d = data.shape[1]
+    n_total = n_input if n_rows_full is None else int(n_rows_full)
     if len(columns) != d:
         raise ValueError("columns metadata must match data width")
     # The timeline is always-on: construction is host-orchestrated with a
@@ -561,14 +577,17 @@ def build_pairwise_hist(
     timeline = BuildTimeline()
 
     # --- 1. sample ---------------------------------------------------------
-    with timeline.phase("sample", n_rows=int(data.shape[0]), d=d):
-        n_s = min(params.n_samples, data.shape[0])
-        if n_s < data.shape[0]:
+    with timeline.phase("sample", n_rows=n_input, d=d):
+        n_s = min(params.n_samples, n_input)
+        if n_s < n_input:
             rng = np.random.default_rng(params.seed)
-            rows = rng.choice(data.shape[0], size=n_s, replace=False)
-            sample = data[rows]
+            rows = rng.choice(n_input, size=n_s, replace=False)
         else:
-            sample = data
+            rows = None
+        if ct is not None:
+            sample = decompress_rows(ct, rows)
+        else:
+            sample = data if rows is None else data[rows]
         m_pts = max(2, int(round(params.m_frac * n_s)))
         n_take = max(2, math.ceil(n_s / m_pts))
         s_max = max(params.s1_max, params.s2_max)
@@ -655,7 +674,10 @@ def build_pairwise_hist(
         "n_pairs": len(raw_pairs),
         "pair_phase_s": time.perf_counter() - t_pairs,
         "pair_chunk": params.pair_chunk,
+        "from_compressed": ct is not None,
     })
+    if ct is not None:
+        build_stats["rows_decoded"] = int(n_s)
 
     # --- 4. refine 1-D grids to the union of their pairs' edge sets --------
     # Aggregation runs on the 1-D grid (Table 3); without this, a uniform

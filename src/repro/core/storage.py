@@ -395,6 +395,24 @@ def decode(data: bytes) -> PairwiseHist:
                         chi2_table=crit)
 
 
+def blob_info(data: bytes) -> dict:
+    """Cheap header peek: {bytes, n_rows, n_sampled, d} without full decode.
+
+    Reads only the fixed-size preamble, so the cold catalog can report
+    synopsis-bytes telemetry for registered blobs it has not decoded yet.
+    """
+    r = BitReader(data)
+    magic = bytes(r.read(8) for _ in range(4))
+    if magic != _MAGIC:
+        raise ValueError("bad synopsis magic")
+    return {
+        "bytes": len(data),
+        "n_rows": r.read_varint(),
+        "n_sampled": r.read_varint(),
+        "d": r.read_varint(),
+    }
+
+
 def eq12_bound(ph: PairwiseHist) -> int:
     """The paper's storage upper bound (Eq. 12), in bytes, for comparison."""
     d = ph.d

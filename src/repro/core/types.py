@@ -64,6 +64,13 @@ class BuildParams:
     # into a smaller power-of-two launch. 0 disables (run the tail at full
     # slot width); results are schedule-independent either way.
     occupancy_min: float = 0.25       # min live-slot fraction before re-bucket
+    # GD-native construction (knobs documented in docs/compression.md).
+    # When ``build_pairwise_hist`` receives a CompressedTable it decodes only
+    # the N_s sampled rows (never the full matrix); seed_from_bases seeds the
+    # 1-D edges from the deduplicated bases. from_compressed lets the engine
+    # route construction through the stored CompressedTable.
+    from_compressed: bool = True      # engine builds from CompressedTable
+    seed_from_bases: bool = True      # 1-D edges seeded from GD bases
 
     @property
     def min_points(self) -> int:

@@ -69,6 +69,30 @@ class CompressedTable:
         return int(sum(n * max(1, math.ceil(w / 8)) for w in self.total_bits))
 
 
+def decompress_rows(ct: CompressedTable, rows=None) -> np.ndarray:
+    """Decode a row subset of a ``CompressedTable`` bit-exactly.
+
+    ``rows`` is an index array (any order, duplicates allowed) or None for
+    every row. Only the selected rows' base ids / deviations / null-bitmap
+    slices are touched, so decoding an N_s-row construction sample costs
+    O(N_s * d) regardless of the table's full height — this is what lets
+    ``build_pairwise_hist`` consume a ``CompressedTable`` without ever
+    materializing the full raw matrix.
+    """
+    shift = (ct.total_bits - ct.base_bits).astype(np.uint64)
+    ids = ct.base_ids if rows is None else ct.base_ids[rows]
+    base_rows = ct.bases[ids]
+    out = np.empty((ids.shape[0], ct.d), np.float64)
+    for i in range(ct.d):
+        dev = ct.deviations[i] if rows is None else ct.deviations[i][rows]
+        null = ct.null_mask[:, i] if rows is None else ct.null_mask[rows, i]
+        codes = (base_rows[:, i] << shift[i]) | dev
+        col = codes.astype(np.float64)
+        col[null] = np.nan
+        out[:, i] = col
+    return out
+
+
 class GreedyGD:
     """Compressor + decompressor + base extraction."""
 
@@ -176,15 +200,12 @@ class GreedyGD:
 
     def decompress(self, ct: CompressedTable) -> np.ndarray:
         """Bit-exact inverse of compress (NaN restored from the bitmap)."""
-        shift = (ct.total_bits - ct.base_bits).astype(np.uint64)
-        base_rows = ct.bases[ct.base_ids]
-        out = np.empty((ct.n_rows, ct.d), np.float64)
-        for i in range(ct.d):
-            codes = (base_rows[:, i] << shift[i]) | ct.deviations[i]
-            col = codes.astype(np.float64)
-            col[ct.null_mask[:, i]] = np.nan
-            out[:, i] = col
-        return out
+        return decompress_rows(ct, None)
+
+    @staticmethod
+    def decompress_rows(ct: CompressedTable, rows) -> np.ndarray:
+        """Decode only ``rows`` (see module-level ``decompress_rows``)."""
+        return decompress_rows(ct, rows)
 
     @staticmethod
     def seed_edges(ct: CompressedTable) -> list:

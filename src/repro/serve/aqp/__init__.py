@@ -10,7 +10,7 @@ plan-shape waves whose hot path is one fused kernel launch per group
 """
 from repro.core.query import AdmissionRejected  # noqa: F401
 from repro.serve.aqp.cache import LRUCache, normalize_sql  # noqa: F401
-from repro.serve.aqp.catalog import TableCatalog  # noqa: F401
+from repro.serve.aqp.catalog import ColdTable, TableCatalog  # noqa: F401
 from repro.serve.aqp.metrics import (AdmissionMetrics, Metrics,  # noqa: F401
                                      TableMetrics)
 from repro.serve.aqp.scheduler import (BatchScheduler,  # noqa: F401

@@ -5,12 +5,159 @@ name — the single-table engines just ignored it. The catalog closes that
 gap: queries against unregistered tables raise ``PlanError`` with the list
 of known tables, and each registered ``AQPFramework`` reports its staleness
 epoch for cache invalidation.
+
+**Cold tier** (``register_cold`` / ``ColdTable``): a table can register as
+a bit-packed ``storage.py`` synopsis blob (plus, optionally, its
+``CompressedTable``) instead of a live framework. The blob decodes lazily
+on the first ``snapshot``/``published`` access — concurrent first queries
+block on one decode and all observe the same atomic ``(engine, epoch)``
+pair, exactly the ``append_rows``/``rebuild`` publication semantics — so
+thousands of registered tables cost blob bytes, not runtime synopses,
+until queried. ``epoch`` never triggers a decode (it is on the submit-path
+cache-validation hot path).
 """
 from __future__ import annotations
 
+import threading
+import time
+import types
+
 from repro.aqp.engine import AQPFramework
-from repro.core.query import PlanError
+from repro.core import storage as storagemod
+from repro.core.build import build_pairwise_hist
+from repro.core.query import PlanError, QueryEngine
 from repro.core.types import BuildParams
+
+
+class ColdTable:
+    """A storage-tier table: bit-packed synopsis blob, decoded lazily.
+
+    Duck-types the slice of ``AQPFramework`` the catalog and server use
+    (``published`` / ``epoch`` / ``engine`` / ``on_invalidate`` /
+    ``off_invalidate``). The epoch is allocated from the same process-global
+    sequence at registration and is *stable across the first decode* —
+    decoding changes representation, not table state — so epoch-keyed
+    plan/result caches populated after the decode stay valid. ``rebuild``
+    (GD-native, from the attached ``CompressedTable``) re-encodes the blob
+    and publishes at a fresh epoch, firing the invalidation callbacks like
+    a live framework's rebuild.
+
+    ``decode_cb(n_bytes, decode_s)`` (optional) fires once per decode —
+    the server wires it to per-table cold-start telemetry.
+    """
+
+    def __init__(self, blob: bytes, compressed=None,
+                 params: BuildParams | None = None, fastpath=None,
+                 decode_cb=None):
+        storagemod.blob_info(blob)          # validate the magic up front
+        self.blob = bytes(blob)
+        self.compressed = compressed
+        self.params = params
+        self.fastpath = fastpath
+        self.decode_cb = decode_cb
+        self.decode_count = 0
+        self._lock = threading.Lock()
+        self._invalidate_cbs = []
+        # Same atomic-tuple publication as AQPFramework: (engine, epoch,
+        # timings) swaps in one assignment; engine None = not yet decoded.
+        self._published: tuple = (None, next(AQPFramework._epoch_seq),
+                                  types.MappingProxyType({}))
+
+    # -------------------------------------------------------- framework duck
+
+    @property
+    def engine(self):
+        """The decoded QueryEngine, or None while still cold (no decode)."""
+        return self._published[0]
+
+    @property
+    def epoch(self) -> int:
+        """Staleness epoch; never triggers a decode (submit-path safe)."""
+        return self._published[1]
+
+    @property
+    def published(self) -> tuple:
+        """Atomic ``(engine, epoch)``; decodes the blob on first access."""
+        pub = self._published
+        if pub[0] is None:
+            pub = self._decode()
+        return pub[:2]
+
+    @property
+    def timings(self) -> "types.MappingProxyType":
+        """Read-only telemetry published with the engine (decode/build)."""
+        return self._published[2]
+
+    def on_invalidate(self, callback):
+        """Register ``callback(table)`` to fire on every epoch bump."""
+        self._invalidate_cbs.append(callback)
+
+    def off_invalidate(self, callback):
+        """Detach a callback registered with ``on_invalidate`` (no-op if
+        absent)."""
+        try:
+            self._invalidate_cbs.remove(callback)
+        except ValueError:
+            pass
+
+    # ------------------------------------------------------------- lifecycle
+
+    def _decode(self) -> tuple:
+        """Decode the blob under the lock (double-checked): concurrent first
+        readers block here and then all see the same published tuple."""
+        with self._lock:
+            pub = self._published
+            if pub[0] is not None:
+                return pub
+            t0 = time.perf_counter()
+            ph = storagemod.decode(self.blob)
+            engine = QueryEngine(ph, fastpath=self.fastpath)
+            decode_s = time.perf_counter() - t0
+            self.decode_count += 1
+            self._published = (engine, pub[1], types.MappingProxyType({
+                "cold_decode_s": decode_s,
+                "synopsis_bytes": len(self.blob),
+            }))
+            if self.decode_cb is not None:
+                self.decode_cb(len(self.blob), decode_s)
+            return self._published
+
+    def rebuild(self, params: BuildParams | None = None) -> "ColdTable":
+        """Rebuild the synopsis GD-natively from the attached
+        ``CompressedTable``, re-encode the blob and publish at a fresh
+        epoch (fires the invalidation callbacks — caches purge exactly as
+        for a live framework's rebuild)."""
+        if self.compressed is None:
+            raise RuntimeError(
+                "cold table has no CompressedTable attached; cannot rebuild")
+        engine_old = self.published[0]      # decode if needed: columns live
+        columns = engine_old.ph.columns     # in the synopsis
+        build_params = params or self.params or engine_old.ph.params
+        t0 = time.perf_counter()
+        ph = build_pairwise_hist(self.compressed, columns, build_params)
+        blob = storagemod.encode(ph)
+        engine = QueryEngine(ph, fastpath=self.fastpath)
+        build_s = time.perf_counter() - t0
+        with self._lock:
+            self.blob = blob
+            self.params = build_params
+            self._published = (engine, next(AQPFramework._epoch_seq),
+                               types.MappingProxyType({
+                                   "build_synopsis_s": build_s,
+                                   "synopsis_bytes": len(blob),
+                                   "build_from_compressed": True,
+                               }))
+        for cb in list(self._invalidate_cbs):
+            cb(self)
+        return self
+
+    def cold_info(self) -> dict:
+        """Header peek + decode state: {bytes, n_rows, n_sampled, d,
+        decoded, decode_count} without forcing a decode."""
+        info = storagemod.blob_info(self.blob)
+        info["decoded"] = self._published[0] is not None
+        info["decode_count"] = self.decode_count
+        return info
 
 
 class TableCatalog:
@@ -35,6 +182,17 @@ class TableCatalog:
                           fastpath=fastpath)
         fw.ingest(table)
         return self.register(name, fw)
+
+    def register_cold(self, name: str, blob: bytes, compressed=None,
+                      params: BuildParams | None = None, fastpath=None,
+                      decode_cb=None) -> ColdTable:
+        """Register a storage-tier table: a bit-packed synopsis blob (plus
+        optionally its ``CompressedTable`` for GD-native rebuilds) that
+        decodes lazily on first query — see ``ColdTable``."""
+        cold = ColdTable(blob, compressed=compressed, params=params,
+                         fastpath=fastpath, decode_cb=decode_cb)
+        self._tables[name] = cold
+        return cold
 
     def unregister(self, name: str):
         """Drop ``name`` from the registry (no-op if absent)."""

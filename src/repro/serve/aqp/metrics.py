@@ -76,6 +76,9 @@ class TableMetrics:
         self.n_group_queries = 0    # GROUP BY queries answered
         self.n_leaves_executed = 0  # GROUP BY leaves actually executed
         self.n_leaf_cache_hits = 0  # GROUP BY leaves served from cache
+        self.n_cold_decodes = 0     # cold-tier blob -> engine decodes
+        self.cold_synopsis_bytes = 0  # registered blob size (cold tables)
+        self.cold_decode_ms = None  # latest cold-start decode latency
         self._t_first = None
         self._t_last = None
 
@@ -104,6 +107,19 @@ class TableMetrics:
             self.n_leaves_executed += int(n_executed)
             self.n_leaf_cache_hits += int(n_cached)
 
+    def record_cold_register(self, n_bytes: int):
+        """A cold (storage-tier) table registered under this name: its
+        bit-packed synopsis blob size, reported before any decode."""
+        with self._lock:
+            self.cold_synopsis_bytes = int(n_bytes)
+
+    def record_cold_decode(self, n_bytes: int, decode_s: float):
+        """One lazy cold-start decode (blob -> engine) and its latency."""
+        with self._lock:
+            self.n_cold_decodes += 1
+            self.cold_synopsis_bytes = int(n_bytes)
+            self.cold_decode_ms = float(decode_s) * 1e3
+
     def snapshot(self) -> dict:
         """Point-in-time dict of counters + p50/p99/qps (None when empty)."""
         with self._lock:
@@ -128,6 +144,12 @@ class TableMetrics:
                     "leaf_cache_hits": self.n_leaf_cache_hits,
                 },
             }
+            if self.n_cold_decodes or self.cold_synopsis_bytes:
+                snap["cold"] = {
+                    "decodes": self.n_cold_decodes,
+                    "synopsis_bytes": self.cold_synopsis_bytes,
+                    "decode_ms": self.cold_decode_ms,
+                }
         # qps window: once >= 1 query landed, span is clamped to a small
         # epsilon so a single query (span == 0 between first and last)
         # reports a finite rate instead of None.

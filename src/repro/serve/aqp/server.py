@@ -262,6 +262,21 @@ class AQPServer:
         self._wire(name, fw)
         return self
 
+    def register_cold(self, name: str, blob: bytes, compressed=None,
+                      params=None, fastpath=None) -> "AQPServer":
+        """Register a cold (storage-tier) table: a bit-packed synopsis blob
+        that decodes lazily on the first query against it. The decode
+        latency and blob size land in this table's metrics (``stats()``
+        ``"cold"`` section); ``compressed`` (a ``CompressedTable``) enables
+        GD-native ``rebuild`` on the returned catalog entry."""
+        tm = self.metrics.table(name)
+        tm.record_cold_register(len(blob))
+        cold = self.catalog.register_cold(
+            name, blob, compressed=compressed, params=params,
+            fastpath=fastpath, decode_cb=tm.record_cold_decode)
+        self._wire(name, cold)
+        return self
+
     def _wire(self, name: str, framework):
         old = self._wiring.pop(name, None)
         if old is not None:

@@ -1,8 +1,20 @@
 """GreedyGD compression + preprocessing."""
 import numpy as np
+import pytest
 
-from repro.gd.greedygd import GreedyGD
+from repro.gd.greedygd import GreedyGD, decompress_rows
 from repro.gd.preprocess import preprocess_column, preprocess_table
+
+
+def _roundtrip_bit_exact(data):
+    gd = GreedyGD(search_rows=500)
+    ct = gd.compress(data)
+    rec = gd.decompress(ct)
+    assert rec.shape == data.shape
+    assert np.array_equal(np.isnan(rec), np.isnan(data))
+    ok = ~np.isnan(data)
+    assert data[ok].tobytes() == rec[ok].tobytes()   # bit-exact, not approx
+    return ct
 
 
 def test_preprocess_float_to_int():
@@ -55,6 +67,68 @@ def test_seed_edges_are_sorted_and_in_domain():
         assert np.all(np.diff(edges) > 0)
         assert edges.min() >= 0
         assert edges.max() <= data[:, i].max() + 1
+
+
+@pytest.mark.parametrize("case", [
+    "nan_pattern", "constant_cols", "single_row", "all_unique",
+    "nan_only_col", "nibble_boundary",
+])
+def test_gd_lossless_edge_cases(case):
+    """decompress(compress(x)) is bit-exact on the adversarial shapes the
+    null bitmap / base split / nibble granularity each stress."""
+    rng = np.random.default_rng(42)
+    if case == "nan_pattern":
+        data = rng.integers(0, 5000, (3000, 4)).astype(float)
+        data[rng.random((3000, 4)) < 0.2] = np.nan
+    elif case == "constant_cols":
+        data = np.stack([np.full(500, 7.0), np.zeros(500),
+                         rng.integers(0, 9, 500).astype(float)], 1)
+    elif case == "single_row":
+        data = np.array([[13.0, 0.0, 4095.0]])
+    elif case == "all_unique":
+        data = np.stack([np.arange(2000, dtype=float),
+                         rng.permutation(2000).astype(float)], 1)
+    elif case == "nan_only_col":
+        data = rng.integers(0, 100, (200, 3)).astype(float)
+        data[:, 1] = np.nan
+    else:  # nibble_boundary: widths straddling 2**k - 1 / 2**k
+        cols = [np.array([(1 << k) - 1, (1 << k), 0], float)
+                for k in (4, 8, 12, 16)]
+        data = np.stack(cols, 1)
+    _roundtrip_bit_exact(data)
+
+
+def test_decompress_rows_subset_matches_full():
+    """Row-subset decode (any order, duplicates) slices the full decode —
+    the invariant GD-native construction rests on."""
+    rng = np.random.default_rng(5)
+    data = rng.integers(0, 3000, (4000, 3)).astype(float) * 8 \
+        + rng.integers(0, 8, (4000, 3))
+    data[rng.random((4000, 3)) < 0.1] = np.nan
+    ct = GreedyGD(search_rows=500).compress(data)
+    full = GreedyGD().decompress(ct)
+    rows = np.array([0, 3999, 17, 17, 2500, 1])       # dupes + unsorted
+    sub = decompress_rows(ct, rows)
+    assert full[rows].tobytes() == sub.tobytes()
+    assert decompress_rows(ct, None).tobytes() == full.tobytes()
+
+
+def test_seed_edges_invariants():
+    """seed_edges: strictly increasing, within [0, column max], and
+    invariant under row permutation (bases are a set, order-free)."""
+    rng = np.random.default_rng(9)
+    data = np.stack([rng.integers(0, 4000, 6000).astype(float),
+                     rng.integers(0, 64, 6000).astype(float) * 64], 1)
+    gd = GreedyGD(search_rows=6000)     # full-data plan: permutation-proof
+    ct = gd.compress(data)
+    edges = GreedyGD.seed_edges(ct)
+    for i, e in enumerate(edges):
+        assert np.all(np.diff(e) > 0)
+        assert e.min() >= 0.0 and e.max() <= data[:, i].max()
+    perm = rng.permutation(data.shape[0])
+    edges_p = GreedyGD.seed_edges(gd.compress(data[perm]))
+    for e1, e2 in zip(edges, edges_p):
+        assert np.array_equal(e1, e2)
 
 
 def test_gd_seeding_changes_initial_edges_not_correctness(small_table):

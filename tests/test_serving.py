@@ -327,6 +327,100 @@ def test_unregister_and_close_detach(tables):
     assert not fw._invalidate_cbs       # discarded server is unreferenced
 
 
+# ---------------------------------------------------------------- cold tier
+
+
+@pytest.fixture(scope="module")
+def cold_blob(tables):
+    """A bit-packed synopsis blob + its CompressedTable, built GD-natively."""
+    from repro.core import storage
+    sensors, _ = tables
+    fw = AQPFramework(params=BuildParams(n_samples=4_000, seed=11),
+                      use_compression=True).ingest(sensors)
+    return storage.encode(fw.synopsis), fw.compressed, fw
+
+
+def test_cold_catalog_lazy_decode_once(cold_blob):
+    blob, compressed, fw = cold_blob
+    srv = AQPServer(mode="numpy")
+    srv.register_cold("sensors", blob, compressed=compressed)
+    cold = srv.catalog.resolve("sensors")
+    # Registration and epoch reads never decode (submit-path safety).
+    assert srv.catalog.epoch("sensors") == cold.epoch
+    assert cold.cold_info()["decoded"] is False and cold.decode_count == 0
+    sql = "SELECT COUNT(a) FROM sensors WHERE b > 100"
+    res = srv.query(sql)
+    assert cold.decode_count == 1
+    # Decoded synopsis answers like the live framework it was encoded from.
+    ref = fw.engine.query(sql)
+    np.testing.assert_allclose(res.as_tuple(), ref.as_tuple(),
+                               rtol=1e-9, atol=1e-9)
+    # Subsequent queries reuse the decoded engine — decode-once.
+    srv.query("SELECT AVG(b) FROM sensors WHERE a < 300")
+    assert cold.decode_count == 1
+    st = srv.stats()["tables"]["sensors"]["cold"]
+    assert st["decodes"] == 1 and st["synopsis_bytes"] == len(blob)
+    assert st["decode_ms"] is not None and st["decode_ms"] > 0
+    srv.close()
+
+
+def test_cold_epoch_stable_across_decode_bumps_on_rebuild(cold_blob):
+    blob, compressed, _ = cold_blob
+    srv = AQPServer(mode="numpy")
+    srv.register_cold("sensors", blob, compressed=compressed)
+    cold = srv.catalog.resolve("sensors")
+    e0 = srv.catalog.epoch("sensors")
+    srv.query("SELECT COUNT(*) FROM sensors WHERE a >= 0")
+    # The first decode changes representation, not table state: epoch-keyed
+    # cache entries written after it stay valid.
+    assert srv.catalog.epoch("sensors") == e0
+    assert len(srv.result_cache) == 1
+    # GD-native rebuild: fresh epoch, invalidation purges the caches.
+    cold.rebuild()
+    assert srv.catalog.epoch("sensors") > e0
+    assert len(srv.result_cache) == 0
+    res = srv.query("SELECT COUNT(*) FROM sensors WHERE a >= 0")
+    assert res.estimate is not None
+    assert cold.decode_count == 1       # rebuild publishes directly, no decode
+    assert cold.cold_info()["bytes"] > 0
+    srv.close()
+
+
+def test_cold_rebuild_without_compressed_table_refuses(cold_blob):
+    blob, _, _ = cold_blob
+    cat = TableCatalog()
+    cold = cat.register_cold("t", blob)          # no CompressedTable attached
+    with pytest.raises(RuntimeError, match="CompressedTable"):
+        cold.rebuild()
+
+
+def test_cold_concurrent_first_access_decodes_once(cold_blob):
+    """No stale serve mid-decode: concurrent first readers block on the one
+    decode and all observe the same atomic (engine, epoch) pair."""
+    import threading
+    blob, compressed, _ = cold_blob
+    cat = TableCatalog()
+    cat.register_cold("t", blob, compressed=compressed)
+    cold = cat.resolve("t")
+    seen = []
+    barrier = threading.Barrier(8)
+
+    def reader():
+        barrier.wait()
+        seen.append(cat.snapshot("t"))
+
+    threads = [threading.Thread(target=reader) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert cold.decode_count == 1
+    engines = {id(eng) for eng, _ in seen}
+    epochs = {ep for _, ep in seen}
+    assert len(engines) == 1 and len(epochs) == 1
+    assert epochs == {cold.epoch}
+
+
 # ------------------------------------------------------------------- metrics
 
 
