@@ -25,13 +25,22 @@ def run(rows: list, quick: bool = False):
         t0 = time.perf_counter()
         ph2 = storage.decode(blob)
         decode_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        ph_oracle = storage.decode(blob, vectorized=False)
+        decode_oracle_ms = (time.perf_counter() - t0) * 1e3
         roundtrip = all(
             np.allclose(h1.h, h2.h) and np.allclose(h1.edges, h2.edges)
             for h1, h2 in zip(fw.synopsis.hists, ph2.hists))
+        vectorized_ok = all(
+            np.array_equal(h1.h, h2.h) and np.array_equal(h1.edges, h2.edges)
+            for h1, h2 in zip(ph_oracle.hists, ph2.hists))
         rep["roundtrip_ok"] = roundtrip
+        rep["vectorized_matches_oracle"] = vectorized_ok
         rep["ratio_vs_eq12"] = rep["total"] / max(rep["eq12_bound"], 1)
         rep["encode_ms"] = encode_ms
         rep["decode_ms"] = decode_ms
+        rep["decode_oracle_ms"] = decode_oracle_ms
+        rep["decode_speedup"] = decode_oracle_ms / max(decode_ms, 1e-9)
         out[name] = rep
         emit(rows, f"storage/{name}/encoded", None, f"{rep['total']}B")
         emit(rows, f"storage/{name}/vs_eq12_bound", None,
@@ -39,6 +48,9 @@ def run(rows: list, quick: bool = False):
         emit(rows, f"storage/{name}/roundtrip", None, str(roundtrip))
         emit(rows, f"storage/{name}/codec", None,
              f"encode {encode_ms:.1f} ms / decode {decode_ms:.1f} ms")
+        emit(rows, f"storage/{name}/decode_vectorized", None,
+             f"{decode_ms:.1f} ms vs oracle {decode_oracle_ms:.1f} ms "
+             f"({rep['decode_speedup']:.1f}x, match={vectorized_ok})")
     save_json("storage", out)
     return out
 

@@ -74,7 +74,10 @@ def class_fields(path, cls):
                     and isinstance(st.target, ast.Name)]
     raise SystemExit(f"cannot find {cls} in {path}")
 
-compression_knobs = ["from_compressed", "seed_from_bases"]
+# Cold-tier governor knobs (AQPServer kwargs) live with the cold-catalog
+# docs in compression.md, not serving.md.
+compression_knobs = ["from_compressed", "seed_from_bases",
+                     "max_engine_bytes", "demote_idle_s"]
 build_knobs = [k for k in class_fields("src/repro/core/types.py",
                                        "BuildParams")
                if k not in compression_knobs]

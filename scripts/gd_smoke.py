@@ -13,7 +13,11 @@ End-to-end check of the GD-native compressed pipeline (PR 8):
      across the decode;
   4. GD-native ``rebuild`` bumps the epoch, purges the result cache, and
      the rebuilt table still answers; cold telemetry (synopsis bytes,
-     decode ms) lands in ``stats()``.
+     decode ms) lands in ``stats()``;
+  5. ``demote`` drops the engine back to its blob at a *stable* epoch,
+     the next query transparently re-decodes (decode-count increments)
+     with bit-identical answers, and demote telemetry lands in
+     ``stats()["cold"]``.
 
 Writes nothing; exits non-zero on any failure.
 """
@@ -107,9 +111,36 @@ def main() -> int:
     if again.estimate is None or first.estimate is None:
         print("FAIL: no estimate before/after rebuild")
         return 1
-    srv.close()
     print(f"rebuild: OK (epoch {e0} -> {cold.epoch}, caches purged, "
           f"estimate {first.estimate:.0f} -> {again.estimate:.0f})")
+
+    e1 = srv.catalog.epoch("t")
+    dc = cold.decode_count
+    if not srv.demote("t") or cold.engine is not None:
+        print("FAIL: demote did not drop the decoded engine")
+        return 1
+    if srv.catalog.epoch("t") != e1:
+        print(f"FAIL: demote moved the epoch ({e1} -> "
+              f"{srv.catalog.epoch('t')})")
+        return 1
+    fresh = srv.query("SELECT COUNT(*) FROM t WHERE b < 810")
+    if fresh.estimate is None or cold.decode_count != dc + 1:
+        print(f"FAIL: post-demote query did not re-decode "
+              f"(count={cold.decode_count}, want {dc + 1})")
+        return 1
+    redo = srv.query(sql)
+    if redo.as_tuple()[:3] != again.as_tuple()[:3]:
+        print(f"FAIL: post-demote answer drifted: "
+              f"{again.as_tuple()[:3]} -> {redo.as_tuple()[:3]}")
+        return 1
+    snap = srv.stats()
+    if snap["cold"]["demotes"] < 1 \
+            or snap["tables"]["t"]["cold"]["demotes"] < 1:
+        print(f"FAIL: demote telemetry missing: {snap.get('cold')}")
+        return 1
+    srv.close()
+    print(f"demote: OK (re-decode {dc} -> {cold.decode_count}, epoch "
+          f"stable at {e1}, answers bit-identical)")
     print("gd smoke: PASS")
     return 0
 

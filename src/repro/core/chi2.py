@@ -65,6 +65,15 @@ def chi2_isf(alpha: float, df, iters: int = 90):
     return 0.5 * (lo + hi)
 
 
+# Largest crit table computed so far, per alpha. chi2_isf is element-wise
+# over df (bisection per element, no cross-element coupling), so a longer
+# table's prefix is bit-identical to a shorter table computed directly —
+# which lets repeat callers (notably storage.decode, where the un-memoized
+# fori_loop recompile used to dominate cold-start latency) slice instead of
+# recompiling.
+_CRIT_CACHE: dict = {}
+
+
 def build_crit_table(alpha: float, s_max: int) -> np.ndarray:
     """Critical values indexed by the number of sub-bins ``s``.
 
@@ -74,11 +83,15 @@ def build_crit_table(alpha: float, s_max: int) -> np.ndarray:
     """
     if s_max < 2:
         raise ValueError("s_max must be >= 2")
-    s = np.arange(s_max + 1)
-    table = np.full(s_max + 1, np.inf, dtype=np.float64)
-    vals = np.asarray(chi2_isf(alpha, jnp.asarray(s[2:] - 1, jnp.float64)))
-    table[2:] = vals
-    return table
+    cached = _CRIT_CACHE.get(alpha)
+    if cached is None or len(cached) < s_max + 1:
+        s = np.arange(s_max + 1)
+        table = np.full(s_max + 1, np.inf, dtype=np.float64)
+        vals = np.asarray(chi2_isf(alpha, jnp.asarray(s[2:] - 1, jnp.float64)))
+        table[2:] = vals
+        table.setflags(write=False)
+        _CRIT_CACHE[alpha] = cached = table
+    return cached[:s_max + 1].copy()
 
 
 def num_subbins(u, s_max: int):

@@ -227,4 +227,11 @@ class PairwiseHist:
             total += sum(np.asarray(a).nbytes for a in hist)
         for p in self.pairs.values():
             total += sum(np.asarray(a).nbytes for a in p)
+        total += self.chi2_table.nbytes
         return total
+
+    @property
+    def nbytes(self) -> int:
+        """Decoded-engine footprint estimator the cold-tier governor budgets
+        against (``AQPServer(max_engine_bytes=...)``)."""
+        return self.nbytes_runtime()

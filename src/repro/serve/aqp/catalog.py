@@ -42,8 +42,16 @@ class ColdTable:
     and publishes at a fresh epoch, firing the invalidation callbacks like
     a live framework's rebuild.
 
-    ``decode_cb(n_bytes, decode_s)`` (optional) fires once per decode —
-    the server wires it to per-table cold-start telemetry.
+    ``demote`` reverses the decode: the engine drops back to its blob at
+    the *same* epoch (again a representation change, not a state change —
+    epoch-keyed cache entries stay valid), and the next query transparently
+    re-decodes. In-flight waves holding the pre-demote engine reference
+    finish safely; the tuple swap never mutates an engine in place.
+
+    ``decode_cb(n_bytes, decode_s)`` (optional) fires once per decode,
+    *outside* the publication lock — the server wires it to per-table
+    cold-start telemetry and the memory governor, which may demote other
+    tables (taking their locks) from inside the callback.
     """
 
     def __init__(self, blob: bytes, compressed=None,
@@ -56,12 +64,22 @@ class ColdTable:
         self.fastpath = fastpath
         self.decode_cb = decode_cb
         self.decode_count = 0
+        self.demote_count = 0
         self._lock = threading.Lock()
+        # Rebuilds serialize on their own lock so a slow older build can
+        # never overwrite a newer publication (epochs are claimed before
+        # building, and the publish refuses to go backwards).
+        self._rebuild_lock = threading.Lock()
         self._invalidate_cbs = []
+        self._engine_nbytes = 0
         # Same atomic-tuple publication as AQPFramework: (engine, epoch,
         # timings) swaps in one assignment; engine None = not yet decoded.
         self._published: tuple = (None, next(AQPFramework._epoch_seq),
                                   types.MappingProxyType({}))
+        # Epoch the current self.blob encodes; when a rebuild bumps the
+        # epoch the blob is re-encoded in step, so demote only needs to
+        # re-encode if the two ever diverge.
+        self._blob_epoch = self._published[1]
 
     # -------------------------------------------------------- framework duck
 
@@ -104,7 +122,12 @@ class ColdTable:
 
     def _decode(self) -> tuple:
         """Decode the blob under the lock (double-checked): concurrent first
-        readers block here and then all see the same published tuple."""
+        readers block here and then all see the same published tuple.
+
+        Returns the locally published tuple (not a re-read of
+        ``_published``) so a demote racing in right after the decode cannot
+        hand the caller a cold ``(None, epoch)`` — the in-flight query keeps
+        the engine it decoded."""
         with self._lock:
             pub = self._published
             if pub[0] is not None:
@@ -114,63 +137,122 @@ class ColdTable:
             engine = QueryEngine(ph, fastpath=self.fastpath)
             decode_s = time.perf_counter() - t0
             self.decode_count += 1
-            self._published = (engine, pub[1], types.MappingProxyType({
+            self._engine_nbytes = ph.nbytes
+            published = (engine, pub[1], types.MappingProxyType({
                 "cold_decode_s": decode_s,
                 "synopsis_bytes": len(self.blob),
             }))
-            if self.decode_cb is not None:
-                self.decode_cb(len(self.blob), decode_s)
-            return self._published
+            self._published = published
+        # Outside the lock: the server's callback runs the memory governor,
+        # which may demote tables (taking their _lock) — firing it under
+        # our own (non-reentrant) lock would deadlock on self-demotion.
+        if self.decode_cb is not None:
+            self.decode_cb(len(self.blob), decode_s)
+        return published
+
+    def demote(self) -> bool:
+        """Drop the decoded engine back to the blob (the governor's evict).
+
+        Publishes ``(None, epoch)`` at the *unchanged* epoch — demote is a
+        representation change, so plan/result caches keyed on the epoch stay
+        valid and no invalidation callbacks fire. If the engine was rebuilt
+        since the blob was last encoded, the fresh synopsis is re-encoded
+        first so no state is lost. Returns True if an engine was resident
+        (demoted), False if the table was already cold (no-op)."""
+        with self._lock:
+            pub = self._published
+            engine = pub[0]
+            if engine is None:
+                return False
+            if self._blob_epoch != pub[1]:
+                self.blob = storagemod.encode(engine.ph)
+                self._blob_epoch = pub[1]
+            self.demote_count += 1
+            self._engine_nbytes = 0
+            self._published = (None, pub[1], types.MappingProxyType({
+                "demoted": True,
+                "synopsis_bytes": len(self.blob),
+            }))
+        return True
+
+    @property
+    def resident_bytes(self) -> int:
+        """Decoded-engine footprint right now (0 while cold/demoted)."""
+        return self._engine_nbytes if self._published[0] is not None else 0
 
     def rebuild(self, params: BuildParams | None = None) -> "ColdTable":
         """Rebuild the synopsis GD-natively from the attached
         ``CompressedTable``, re-encode the blob and publish at a fresh
         epoch (fires the invalidation callbacks — caches purge exactly as
-        for a live framework's rebuild)."""
+        for a live framework's rebuild).
+
+        Concurrent rebuilds serialize on ``_rebuild_lock`` and each claims
+        its epoch *before* building, so publications land in epoch order;
+        the publish additionally refuses to overwrite a higher epoch, so a
+        stale build can never clobber a newer one (last-write-wins bug)."""
         if self.compressed is None:
             raise RuntimeError(
                 "cold table has no CompressedTable attached; cannot rebuild")
-        engine_old = self.published[0]      # decode if needed: columns live
-        columns = engine_old.ph.columns     # in the synopsis
-        build_params = params or self.params or engine_old.ph.params
-        t0 = time.perf_counter()
-        ph = build_pairwise_hist(self.compressed, columns, build_params)
-        blob = storagemod.encode(ph)
-        engine = QueryEngine(ph, fastpath=self.fastpath)
-        build_s = time.perf_counter() - t0
-        with self._lock:
-            self.blob = blob
-            self.params = build_params
-            self._published = (engine, next(AQPFramework._epoch_seq),
-                               types.MappingProxyType({
-                                   "build_synopsis_s": build_s,
-                                   "synopsis_bytes": len(blob),
-                                   "build_from_compressed": True,
-                               }))
+        with self._rebuild_lock:
+            epoch_new = next(AQPFramework._epoch_seq)
+            engine_old = self.published[0]  # decode if needed: columns live
+            columns = engine_old.ph.columns  # in the synopsis
+            build_params = params or self.params or engine_old.ph.params
+            t0 = time.perf_counter()
+            ph = build_pairwise_hist(self.compressed, columns, build_params)
+            blob = storagemod.encode(ph)
+            engine = QueryEngine(ph, fastpath=self.fastpath)
+            build_s = time.perf_counter() - t0
+            with self._lock:
+                if self._published[1] > epoch_new:
+                    return self             # a newer publication already won
+                self.blob = blob
+                self.params = build_params
+                self._blob_epoch = epoch_new
+                self._engine_nbytes = ph.nbytes
+                self._published = (engine, epoch_new,
+                                   types.MappingProxyType({
+                                       "build_synopsis_s": build_s,
+                                       "synopsis_bytes": len(blob),
+                                       "build_from_compressed": True,
+                                   }))
         for cb in list(self._invalidate_cbs):
             cb(self)
         return self
 
     def cold_info(self) -> dict:
         """Header peek + decode state: {bytes, n_rows, n_sampled, d,
-        decoded, decode_count} without forcing a decode."""
+        decoded, decode_count, demote_count, resident_bytes} without
+        forcing a decode."""
         info = storagemod.blob_info(self.blob)
         info["decoded"] = self._published[0] is not None
         info["decode_count"] = self.decode_count
+        info["demote_count"] = self.demote_count
+        info["resident_bytes"] = self.resident_bytes
         return info
 
 
 class TableCatalog:
-    """name -> AQPFramework registry with staleness-epoch bookkeeping."""
+    """name -> AQPFramework registry with staleness-epoch bookkeeping.
+
+    All registry access goes through ``_reglock``: ``register``/
+    ``unregister`` racing submit-path ``resolve``/``epoch``/``tables()``
+    used to mutate the plain dict mid-``sorted()`` (``RuntimeError:
+    dictionary changed size during iteration``) or tear a registration.
+    The lock only guards the dict, never a decode or build, so it is
+    never held across anything slow.
+    """
 
     def __init__(self):
         self._tables: dict[str, AQPFramework] = {}
+        self._reglock = threading.Lock()
 
     # ------------------------------------------------------------ registration
 
     def register(self, name: str, framework: AQPFramework) -> AQPFramework:
         """Register an (already ingested or to-be-ingested) framework."""
-        self._tables[name] = framework
+        with self._reglock:
+            self._tables[name] = framework
         return framework
 
     def register_table(self, name: str, table: dict,
@@ -191,33 +273,46 @@ class TableCatalog:
         decodes lazily on first query — see ``ColdTable``."""
         cold = ColdTable(blob, compressed=compressed, params=params,
                          fastpath=fastpath, decode_cb=decode_cb)
-        self._tables[name] = cold
+        with self._reglock:
+            self._tables[name] = cold
         return cold
 
     def unregister(self, name: str):
         """Drop ``name`` from the registry (no-op if absent)."""
-        self._tables.pop(name, None)
+        with self._reglock:
+            self._tables.pop(name, None)
 
     # -------------------------------------------------------------- resolution
 
     def __contains__(self, name: str) -> bool:
-        return name in self._tables
+        with self._reglock:
+            return name in self._tables
 
     def __len__(self) -> int:
-        return len(self._tables)
+        with self._reglock:
+            return len(self._tables)
 
     def tables(self) -> list[str]:
         """Sorted registered table names."""
-        return sorted(self._tables)
+        with self._reglock:
+            return sorted(self._tables)
+
+    def cold_tables(self) -> list:
+        """Point-in-time ``[(name, ColdTable)]`` snapshot — the governor's
+        sweep list (live frameworks are not demotable and are excluded)."""
+        with self._reglock:
+            return [(name, t) for name, t in self._tables.items()
+                    if isinstance(t, ColdTable)]
 
     def resolve(self, name: str) -> AQPFramework:
         """The framework registered under ``name``; PlanError if unknown."""
-        try:
-            return self._tables[name]
-        except KeyError:
+        with self._reglock:
+            fw = self._tables.get(name)
+        if fw is None:
             raise PlanError(
                 f"unknown table {name!r}; registered tables: "
-                f"{self.tables()}") from None
+                f"{self.tables()}")
+        return fw
 
     def engine(self, name: str):
         """Fresh QueryEngine for ``name``; raises RuntimeError if the
@@ -242,5 +337,6 @@ class TableCatalog:
         """Current staleness epoch of a table (cache-key component).
         Unknown tables report -1 so stale cache entries for dropped tables
         can never validate."""
-        fw = self._tables.get(name)
+        with self._reglock:
+            fw = self._tables.get(name)
         return fw.epoch if fw is not None else -1

@@ -79,8 +79,14 @@ class TableMetrics:
         self.n_cold_decodes = 0     # cold-tier blob -> engine decodes
         self.cold_synopsis_bytes = 0  # registered blob size (cold tables)
         self.cold_decode_ms = None  # latest cold-start decode latency
+        self.n_demotes = 0          # governor engine -> blob demotions
+        self.engine_resident_bytes = 0  # decoded-engine footprint right now
         self._t_first = None
         self._t_last = None
+        # Last time this table served anything (executions, result-cache
+        # hits, cold decodes) — the governor's idle clock. Separate from
+        # _t_last so cache hits don't stretch the qps window.
+        self._t_activity = None
 
     def record(self, latency_s: float, batched: bool):
         """One executed query: its latency share and whether it fused."""
@@ -88,6 +94,7 @@ class TableMetrics:
         with self._lock:
             self._t_first = self._t_first if self._t_first is not None else now
             self._t_last = now
+            self._t_activity = now
             self.n_queries += 1
             if batched:
                 self.n_batched += 1
@@ -96,8 +103,12 @@ class TableMetrics:
             self._lat.add(latency_s)
 
     def record_result_hit(self):
-        """One query served from the result cache (no execution)."""
+        """One query served from the result cache (no execution). Counts as
+        table activity for the governor's idle clock — a cache-hit-hot
+        table must not look idle and get demoted under it."""
+        now = time.perf_counter()
         with self._lock:
+            self._t_activity = now
             self.n_result_hits += 1
 
     def record_group_expansion(self, n_executed: int, n_cached: int):
@@ -113,12 +124,31 @@ class TableMetrics:
         with self._lock:
             self.cold_synopsis_bytes = int(n_bytes)
 
-    def record_cold_decode(self, n_bytes: int, decode_s: float):
+    def record_cold_decode(self, n_bytes: int, decode_s: float,
+                           resident_bytes: int | None = None):
         """One lazy cold-start decode (blob -> engine) and its latency."""
+        now = time.perf_counter()
         with self._lock:
+            self._t_activity = now
             self.n_cold_decodes += 1
             self.cold_synopsis_bytes = int(n_bytes)
             self.cold_decode_ms = float(decode_s) * 1e3
+            if resident_bytes is not None:
+                self.engine_resident_bytes = int(resident_bytes)
+
+    def record_demote(self):
+        """One governor demotion (engine -> blob) for this table."""
+        with self._lock:
+            self.n_demotes += 1
+            self.engine_resident_bytes = 0
+
+    @property
+    def last_activity(self) -> float | None:
+        """``time.perf_counter()`` of this table's most recent serve
+        activity (execution, result-cache hit, or cold decode); None if
+        never queried. The governor orders demotion candidates by this."""
+        with self._lock:
+            return self._t_activity
 
     def snapshot(self) -> dict:
         """Point-in-time dict of counters + p50/p99/qps (None when empty)."""
@@ -149,6 +179,8 @@ class TableMetrics:
                     "decodes": self.n_cold_decodes,
                     "synopsis_bytes": self.cold_synopsis_bytes,
                     "decode_ms": self.cold_decode_ms,
+                    "demotes": self.n_demotes,
+                    "resident_bytes": self.engine_resident_bytes,
                 }
         # qps window: once >= 1 query landed, span is clamped to a small
         # epsilon so a single query (span == 0 between first and last)
@@ -275,6 +307,46 @@ class StageMetrics:
             return out
 
 
+class ColdTierMetrics:
+    """Server-wide cold-tier governor telemetry: decoded-engine resident
+    bytes (current + high-water) and total demotions.
+
+    ``record_resident`` is fed *post-enforcement* resident bytes by the
+    governor, so with ``max_engine_bytes`` set the high-water mark is the
+    proof the budget held — a transient decode-then-evict never lands in
+    it."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.resident_bytes = 0
+        self.resident_high_water = 0
+        self.n_demotes = 0
+        self.n_sweeps = 0
+
+    def record_resident(self, n_bytes: int):
+        """One governor sweep's post-enforcement resident-bytes total."""
+        with self._lock:
+            self.n_sweeps += 1
+            self.resident_bytes = int(n_bytes)
+            self.resident_high_water = max(self.resident_high_water,
+                                           int(n_bytes))
+
+    def record_demote(self, n: int = 1):
+        """``n`` engines demoted back to their blobs."""
+        with self._lock:
+            self.n_demotes += int(n)
+
+    def snapshot(self) -> dict:
+        """Point-in-time cold-tier dict (see ``docs/compression.md``)."""
+        with self._lock:
+            return {
+                "resident_bytes": self.resident_bytes,
+                "resident_high_water": self.resident_high_water,
+                "demotes": self.n_demotes,
+                "sweeps": self.n_sweeps,
+            }
+
+
 class Metrics:
     """Per-table ``TableMetrics`` + admission stats + server-wide totals."""
 
@@ -284,6 +356,7 @@ class Metrics:
         self._tables: dict[str, TableMetrics] = {}
         self.admission = AdmissionMetrics(reservoir)
         self.stages = StageMetrics(reservoir)
+        self.cold = ColdTierMetrics()
 
     def table(self, name: str) -> TableMetrics:
         """The (lazily created) ``TableMetrics`` for ``name``."""

@@ -161,11 +161,17 @@ class StreamingAdmission:
 
     def __init__(self, execute_cb, max_wait_ms: float = 2.0,
                  max_batch: int = 64, max_queue_depth: int = 0,
-                 shed_policy: str = "reject", shed_cb=None, tracer=None):
+                 shed_policy: str = "reject", shed_cb=None, tracer=None,
+                 idle_cb=None):
         if shed_policy not in SHED_POLICIES:
             raise ValueError(f"unknown shed_policy {shed_policy!r}; "
                              f"expected one of {SHED_POLICIES}")
         self.execute_cb = execute_cb
+        # Optional between-waves hook on the worker thread (the server wires
+        # the cold-tier memory governor here): runs after each wave's
+        # execute_cb returns, never concurrently with one, and exceptions
+        # are swallowed so housekeeping can't kill the drain loop.
+        self.idle_cb = idle_cb
         # Optional repro.obs.trace.Tracer: each drain emits an instant on
         # the "admission" lane (cause/size/depth/oldest-wait).
         self.tracer = tracer
@@ -308,6 +314,11 @@ class StreamingAdmission:
             if wave is None:
                 return
             self.execute_cb(*wave)
+            if self.idle_cb is not None:
+                try:
+                    self.idle_cb()
+                except Exception:
+                    pass
 
 
 class BatchScheduler:

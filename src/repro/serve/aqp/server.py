@@ -77,12 +77,12 @@ import threading
 import time
 
 from repro.core import sql as sqlmod
-from repro.core.query import (AdmissionRejected, QueryPlan, QueryResult,
-                              assemble_groups)
+from repro.core.query import (AdmissionRejected, PlanError, QueryPlan,
+                              QueryResult, assemble_groups)
 from repro.obs.export import spans_to_events, trace_json, write_trace
 from repro.obs.trace import QueryTrace, Tracer
 from repro.serve.aqp.cache import LRUCache, normalize_sql
-from repro.serve.aqp.catalog import TableCatalog
+from repro.serve.aqp.catalog import ColdTable, TableCatalog
 from repro.serve.aqp.metrics import Metrics
 from repro.serve.aqp.scheduler import (BatchScheduler, PlannerPool,
                                        StreamingAdmission)
@@ -181,6 +181,9 @@ class AQPServer:
         trace_buffer: span ring capacity (oldest spans overwritten).
         slow_query_ms: slow-query log threshold on a traced query's
             end-to-end latency (``explain()["total_ms"]``).
+        max_engine_bytes / demote_idle_s: cold-tier memory governor —
+            budget on decoded cold-table engines and idle-demotion window;
+            see ``docs/compression.md`` for semantics and defaults.
     """
 
     # A submission whose table epoch keeps moving mid-wave re-enqueues at
@@ -206,8 +209,11 @@ class AQPServer:
                  max_queue_depth: int = 1024, shed_policy: str = "reject",
                  retry_timeout_s: float = 30.0, single_lock: bool = False,
                  trace_enabled: bool = False, trace_buffer: int = 65536,
-                 slow_query_ms: float = 100.0):
+                 slow_query_ms: float = 100.0,
+                 max_engine_bytes: int = 0, demote_idle_s: float = 0.0):
         self.catalog = catalog or TableCatalog()
+        self.max_engine_bytes = int(max_engine_bytes)
+        self.demote_idle_s = float(demote_idle_s)
         self.tracer = Tracer(capacity=trace_buffer, enabled=trace_enabled)
         self.slow_query_ms = float(slow_query_ms)
         self._slow_log: collections.deque = collections.deque(
@@ -222,7 +228,8 @@ class AQPServer:
                                             max_queue_depth=max_queue_depth,
                                             shed_policy=shed_policy,
                                             shed_cb=self._on_shed,
-                                            tracer=self.tracer)
+                                            tracer=self.tracer,
+                                            idle_cb=self._govern_cold)
         self.plan_cache = LRUCache(plan_cache_size)
         self.result_cache = LRUCache(result_cache_size,
                                      max_bytes=max_result_bytes)
@@ -268,12 +275,16 @@ class AQPServer:
         that decodes lazily on the first query against it. The decode
         latency and blob size land in this table's metrics (``stats()``
         ``"cold"`` section); ``compressed`` (a ``CompressedTable``) enables
-        GD-native ``rebuild`` on the returned catalog entry."""
-        tm = self.metrics.table(name)
-        tm.record_cold_register(len(blob))
+        GD-native ``rebuild`` on the returned catalog entry.
+
+        The blob is validated (magic check inside ``ColdTable``) *before*
+        any telemetry is recorded, so a rejected registration leaves no
+        phantom metrics entry behind."""
         cold = self.catalog.register_cold(
             name, blob, compressed=compressed, params=params,
-            fastpath=fastpath, decode_cb=tm.record_cold_decode)
+            fastpath=fastpath,
+            decode_cb=lambda n, s, name=name: self._on_cold_decode(name, n, s))
+        self.metrics.table(name).record_cold_register(len(blob))
         self._wire(name, cold)
         return self
 
@@ -285,6 +296,89 @@ class AQPServer:
         cb = lambda fw, name=name: self._purge(name)  # noqa: E731
         framework.on_invalidate(cb)
         self._wiring[name] = (framework, cb)
+
+    # ------------------------------------------------------- cold-tier governor
+
+    def _on_cold_decode(self, name: str, n_bytes: int, decode_s: float):
+        """ColdTable decode callback: per-table telemetry, then immediate
+        budget enforcement (a decode is exactly when resident bytes grow,
+        so waiting for the next between-waves sweep could overshoot)."""
+        try:
+            cold = self.catalog.resolve(name)
+            resident = getattr(cold, "resident_bytes", None)
+        except PlanError:       # unregistered mid-decode
+            resident = None
+        self.metrics.table(name).record_cold_decode(
+            n_bytes, decode_s, resident_bytes=resident)
+        if self.max_engine_bytes > 0:
+            self._govern_cold(idle=False)
+
+    def _govern_cold(self, idle: bool = True):
+        """The cold-tier memory governor: one sweep over the catalog's
+        ``ColdTable`` entries.
+
+        Two policies, both LRU-ordered by ``TableMetrics.last_activity``:
+        idle demotion (``demote_idle_s > 0``: engines untouched for that
+        long drop back to their blobs; only on between-waves sweeps, where
+        ``idle=True``) and budget enforcement (``max_engine_bytes > 0``:
+        least-recently-active engines demote until the decoded-resident
+        total fits). Demotion is epoch-stable, so no cache purge and no
+        invalidation callbacks — an in-flight wave holding a demoted
+        engine's reference finishes safely and the next query re-decodes.
+        Post-enforcement resident bytes land in the server-wide high-water
+        telemetry (``stats()["cold"]``)."""
+        budget = self.max_engine_bytes
+        idle_s = self.demote_idle_s
+        if budget <= 0 and idle_s <= 0:
+            return
+        resident = [(n, t) for n, t in self.catalog.cold_tables()
+                    if t.engine is not None]
+
+        def last_activity(name):
+            la = self.metrics.table(name).last_activity
+            return la if la is not None else 0.0
+
+        demoted = 0
+        if idle and idle_s > 0:
+            now = time.perf_counter()
+            for name, t in resident:
+                if now - last_activity(name) >= idle_s and t.demote():
+                    self.metrics.table(name).record_demote()
+                    demoted += 1
+        if budget > 0:
+            live = sorted(((n, t) for n, t in resident if t.engine is not None),
+                          key=lambda nt: last_activity(nt[0]))
+            total = sum(t.resident_bytes for _, t in live)
+            for name, t in live:
+                if total <= budget:
+                    break
+                n_bytes = t.resident_bytes
+                if t.demote():
+                    self.metrics.table(name).record_demote()
+                    demoted += 1
+                    total -= n_bytes
+        if demoted:
+            self.metrics.cold.record_demote(demoted)
+        self.metrics.cold.record_resident(
+            sum(t.resident_bytes for _, t in self.catalog.cold_tables()))
+
+    def demote(self, name: str) -> bool:
+        """Explicitly demote one cold table's decoded engine back to its
+        blob (same epoch-stable semantics as the governor — caches stay
+        valid, the next query re-decodes). Returns True if an engine was
+        resident and demoted; False for unknown, non-cold, or already-cold
+        tables."""
+        try:
+            t = self.catalog.resolve(name)
+        except PlanError:
+            return False
+        if not isinstance(t, ColdTable) or not t.demote():
+            return False
+        self.metrics.table(name).record_demote()
+        self.metrics.cold.record_demote()
+        self.metrics.cold.record_resident(
+            sum(ct.resident_bytes for _, ct in self.catalog.cold_tables()))
+        return True
 
     def unregister(self, name: str):
         """Drop a table: detach its invalidation wiring and purge its
@@ -926,6 +1020,21 @@ class AQPServer:
             "slow_queries": len(self._slow_log),
             "slow_query_ms": self.slow_query_ms,
         }
+        cold_tables = self.catalog.cold_tables()
+        if cold_tables:
+            gov = self.metrics.cold.snapshot()
+            snap["cold"] = {
+                "tables": len(cold_tables),
+                # Live decoded-engine footprint; the high-water mark is
+                # governor-recorded *post-enforcement* (the budget proof).
+                "resident_bytes": sum(t.resident_bytes
+                                      for _, t in cold_tables),
+                "resident_high_water": gov["resident_high_water"],
+                "demotes": gov["demotes"],
+                "sweeps": gov["sweeps"],
+                "max_engine_bytes": self.max_engine_bytes,
+                "demote_idle_s": self.demote_idle_s,
+            }
         return snap
 
     # ----------------------------------------------------------------- tracing

@@ -386,6 +386,20 @@ def test_cold_epoch_stable_across_decode_bumps_on_rebuild(cold_blob):
     srv.close()
 
 
+def test_register_cold_invalid_blob_leaves_no_phantom_metrics():
+    """Regression: ``register_cold`` recorded cold telemetry *before* the
+    blob's magic was validated, so a rejected registration left a phantom
+    metrics entry (and a ``cold`` stats section) for a table that was
+    never registered. Validation must come first."""
+    srv = AQPServer(mode="numpy")
+    with pytest.raises(ValueError):
+        srv.register_cold("ghost", b"NOPE" + b"\x00" * 64)
+    assert "ghost" not in srv.catalog
+    assert "ghost" not in srv.stats()["tables"]
+    assert "ghost" not in srv.metrics._tables
+    srv.close()
+
+
 def test_cold_rebuild_without_compressed_table_refuses(cold_blob):
     blob, _, _ = cold_blob
     cat = TableCatalog()

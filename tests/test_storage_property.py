@@ -32,7 +32,9 @@ from repro.core.types import (BuildParams, ColumnInfo, Hist1D,  # noqa: E402
 _OPS = st.one_of(
     st.tuples(st.just("bits"), st.integers(0, 2**63 - 1), st.integers(1, 64)),
     st.tuples(st.just("varint"), st.integers(0, 2**62)),
-    st.tuples(st.just("svarint"), st.integers(-2**40, 2**40)),
+    # Crosses the 2**63 boundary where the old C-idiom zig-zag
+    # ((v << 1) ^ (v >> 63)) silently corrupted Python's unbounded ints.
+    st.tuples(st.just("svarint"), st.integers(-2**70, 2**70)),
     st.tuples(st.just("rice"), st.integers(0, 20000), st.integers(0, 10)),
     st.tuples(st.just("f64"), st.floats(allow_nan=True, allow_infinity=True)),
 )
@@ -67,6 +69,22 @@ def test_bitio_interleaved_roundtrip(ops):
             assert r.read_rice(op[2]) == op[1]
         else:
             assert struct.pack("<d", r.read_f64()) == struct.pack("<d", op[1])
+
+
+def test_svarint_boundary_roundtrip():
+    """|v| at and past 2**63 roundtrips exactly.
+
+    Regression: the zig-zag used the C idiom ``(v << 1) ^ (v >> 63)``,
+    which on arbitrary-precision ints maps every v >= 2**63 to the wrong
+    codeword (the ``>> 63`` no longer isolates a sign bit), so the
+    roundtrip silently returned a different number instead of raising."""
+    boundary = [2**63 - 1, 2**63, 2**63 + 1, -(2**63) + 1, -(2**63),
+                -(2**63) - 1, 2**64 + 17, -(2**70) - 3]
+    w = BitWriter()
+    for v in boundary:
+        w.write_svarint(v)
+    r = BitReader(w.getvalue())
+    assert [r.read_svarint() for _ in boundary] == boundary
 
 
 @given(st.lists(st.integers(1, 64), min_size=1, max_size=64),
