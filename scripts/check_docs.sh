@@ -87,11 +87,16 @@ serving_knobs = ["mode", "plan_cache_size", "result_cache_size",
                  "shed_policy", "retry_timeout_s", "single_lock",
                  "plan_templates", "template_cache_size", "planner_workers"]
 obs_knobs = ["trace_enabled", "trace_buffer", "slow_query_ms"]
+# Fault-tolerance knobs (per-query deadline + cold decode resilience)
+# live with the robustness reference in robustness.md.
+robustness_knobs = ["deadline_ms", "decode_retries", "decode_backoff_s",
+                    "breaker_reset_s"]
 docs = {p: p.read_text() for p in sorted(ROOT.glob("docs/*.md"))}
 for knob, home in ([(k, "construction") for k in build_knobs]
                    + [(k, "compression") for k in compression_knobs]
                    + [(k, "serving") for k in serving_knobs]
-                   + [(k, "observability") for k in obs_knobs]):
+                   + [(k, "observability") for k in obs_knobs]
+                   + [(k, "robustness") for k in robustness_knobs]):
     pat = re.compile(rf"`{re.escape(knob)}`")
     hits = [p.name for p, text in docs.items() if pat.search(text)]
     if hits != [f"{home}.md"]:
@@ -104,5 +109,5 @@ if errors:
         print(f"  {err}", file=sys.stderr)
     sys.exit(1)
 print(f"check_docs: OK ({len(md_files)} md files, "
-      f"{len(build_knobs) + len(serving_knobs) + len(obs_knobs)} knobs)")
+      f"{len(build_knobs) + len(serving_knobs) + len(obs_knobs) + len(robustness_knobs)} knobs)")
 EOF

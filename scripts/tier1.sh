@@ -16,6 +16,10 @@
 #   scripts/tier1.sh --gd-smoke    # GD pipeline smoke: compress ->
 #                                  # build-from-compressed -> store ->
 #                                  # cold-serve, decode-once + ratio > 1
+#   scripts/tier1.sh --chaos       # fault-injection chaos smoke: seeded
+#                                  # multi-site fault schedules vs an
+#                                  # undisturbed control; every future
+#                                  # resolves, bit-identical retries
 set -euo pipefail
 cd "$(dirname "$0")/.."
 if [[ "${1:-}" == "--stress" ]]; then
@@ -44,6 +48,13 @@ if [[ "${1:-}" == "--gd-smoke" ]]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         timeout "${GD_SMOKE_BUDGET_S:-300}" \
         python scripts/gd_smoke.py "$@"
+    exit $?
+fi
+if [[ "${1:-}" == "--chaos" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        timeout "${CHAOS_BUDGET_S:-300}" \
+        python scripts/chaos_smoke.py "$@"
     exit $?
 fi
 scripts/check_docs.sh

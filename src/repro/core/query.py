@@ -39,6 +39,10 @@ class QueryResult:
     # Overridden by AdmissionRejected; lets clients branch on res.rejected
     # without an isinstance import.
     rejected = False
+    # Overridden by QueryError / DeadlineExceeded (same pattern): failure
+    # containment resolves futures with typed results, never hangs them.
+    failed = False
+    expired = False
 
     def as_tuple(self):
         return (self.estimate, self.lower, self.upper)
@@ -64,6 +68,49 @@ class AdmissionRejected(QueryResult):
     queue_depth: int = 0
 
     rejected = True
+
+
+@dataclasses.dataclass
+class QueryError(QueryResult):
+    """Typed execution-failure outcome (mirrors ``AdmissionRejected``).
+
+    Resolves the query's future as a *result* rather than an exception so
+    a wave-level crash, a poison query, or a quarantined statement can
+    never hang or kill streaming clients that only read fields. ``kind``
+    is ``"execution"`` (the wave raised while running this query; it was
+    retried once before giving up) or ``"quarantined"`` (the statement was
+    refused up front because it already failed execution twice).
+    ``retries`` counts execution attempts consumed; ``error`` carries the
+    underlying exception text.
+    """
+
+    estimate: float | None = None
+    lower: float | None = None
+    upper: float | None = None
+    error: str = ""
+    kind: str = "execution"
+    retries: int = 0
+
+    failed = True
+
+
+@dataclasses.dataclass
+class DeadlineExceeded(QueryResult):
+    """Typed deadline outcome: the query expired before execution.
+
+    A query submitted with ``deadline_ms`` whose deadline passes while it
+    is still queued skips the fused launch entirely and resolves with this
+    result at the start of the next wave. ``deadline_ms`` echoes the
+    budget; ``elapsed_ms`` is submit-to-resolution wall clock.
+    """
+
+    estimate: float | None = None
+    lower: float | None = None
+    upper: float | None = None
+    deadline_ms: float = 0.0
+    elapsed_ms: float = 0.0
+
+    expired = True
 
 
 class PlanError(ValueError):

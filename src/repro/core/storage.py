@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import math
 import struct
+import zlib
 
 import numpy as np
 
@@ -24,6 +25,63 @@ from repro.core import chi2 as chi2lib
 from repro.core.types import BuildParams, ColumnInfo, Hist1D, PairHist, PairwiseHist
 
 _MAGIC = b"PWH1"
+_FRAME_MAGIC = b"PWF1"
+
+
+class IntegrityError(ValueError):
+    """Typed blob-integrity failure: corrupt, truncated, or mangled synopsis.
+
+    Raised by ``decode``/``blob_info`` whenever the integrity frame fails
+    verification (checksum mismatch, length mismatch, bad magic) or the
+    payload bit-stream turns out to be structurally inconsistent mid-parse.
+    Subclasses ``ValueError`` so pre-frame callers that caught ``ValueError``
+    keep working. A corrupted blob always raises this — never returns wrong
+    data, never hangs.
+    """
+
+
+def _crc32(payload: bytes) -> int:
+    # zlib.crc32 (CRC-32/ISO-HDLC) runs in C and needs no new dependency;
+    # CRC32C (Castagnoli) is a drop-in here if a native impl lands later.
+    return zlib.crc32(payload) & 0xFFFFFFFF
+
+
+def frame_blob(payload: bytes) -> bytes:
+    """Wrap an encoded synopsis stream in the integrity frame.
+
+    Layout: 4-byte frame magic, little-endian u32 payload length,
+    little-endian u32 CRC-32 of the payload, then the payload itself.
+    12 bytes of overhead per blob; verified by ``unframe_blob`` before any
+    bit-level parsing touches the stream.
+    """
+    return _FRAME_MAGIC + struct.pack("<II", len(payload), _crc32(payload)) \
+        + payload
+
+
+def unframe_blob(data: bytes) -> bytes:
+    """Verify and strip the integrity frame; returns the raw payload.
+
+    Framed blobs are checked length-then-checksum and any mismatch raises
+    ``IntegrityError``. Legacy unframed streams (leading with the payload
+    magic ``PWH1``) pass through unchanged so pre-frame blobs stay
+    readable — they simply do not get the checksum guarantee.
+    """
+    head = bytes(data[:4])
+    if head == _FRAME_MAGIC:
+        if len(data) < 12:
+            raise IntegrityError("truncated synopsis frame header")
+        n, crc = struct.unpack("<II", data[4:12])
+        payload = bytes(data[12:])
+        if len(payload) != n:
+            raise IntegrityError(
+                f"synopsis frame length mismatch: header says {n} payload "
+                f"bytes, got {len(payload)}")
+        if _crc32(payload) != crc:
+            raise IntegrityError("synopsis frame checksum mismatch")
+        return payload
+    if head == _MAGIC:
+        return bytes(data)
+    raise IntegrityError("bad synopsis magic")
 
 
 # ---------------------------------------------------------------------------
@@ -220,7 +278,12 @@ class FastBitReader(BitReader):
             return 0
         pos = self.pos
         end = pos + nbits
-        chunk = int.from_bytes(self.data[pos >> 3:(end + 7) >> 3], "big")
+        last = (end + 7) >> 3
+        if last > len(self.data):
+            # A short slice would zero-pad and silently return wrong data
+            # on truncated streams; fail like the oracle reader instead.
+            raise IndexError("bit read overruns the synopsis stream")
+        chunk = int.from_bytes(self.data[pos >> 3:last], "big")
         self.pos = end
         return (chunk >> ((-end) & 7)) & ((1 << nbits) - 1)
 
@@ -230,6 +293,8 @@ class FastBitReader(BitReader):
             return b""
         if (self.pos & 7) == 0:          # aligned: direct slice
             start = self.pos >> 3
+            if start + n > len(self.data):
+                raise IndexError("byte read overruns the synopsis stream")
             self.pos += 8 * n
             return bytes(self.data[start:start + n])
         return self.read_uint_run(n, 8).astype(np.uint8).tobytes()
@@ -475,7 +540,17 @@ def _decode_dim(r: BitReader):
 # ---------------------------------------------------------------------------
 
 
-def encode(ph: PairwiseHist) -> bytes:
+def encode(ph: PairwiseHist, framed: bool = True) -> bytes:
+    """Serialize ``ph`` to a synopsis blob.
+
+    By default the bit-stream is wrapped in the CRC integrity frame
+    (``frame_blob``); pass ``framed=False`` for the raw legacy stream.
+    """
+    payload = _encode_payload(ph)
+    return frame_blob(payload) if framed else payload
+
+
+def _encode_payload(ph: PairwiseHist) -> bytes:
     w = BitWriter()
     for byte in _MAGIC:
         w.write(byte, 8)
@@ -550,11 +625,27 @@ def decode(data: bytes, vectorized: bool = True) -> PairwiseHist:
     real synopses. ``vectorized=False`` walks the identical stream with
     the pure-Python ``BitReader`` oracle; the two are bit-for-bit equal
     (asserted in tests/test_storage_vectorized.py).
+
+    The integrity frame (when present) is verified *before* any bit-level
+    parsing, and structural parse failures are re-raised as
+    ``IntegrityError`` — a corrupted blob raises a typed error rather than
+    returning wrong data or hanging.
     """
+    payload = unframe_blob(data)
+    try:
+        return _decode_payload(payload, vectorized)
+    except IntegrityError:
+        raise
+    except (ValueError, IndexError, KeyError, OverflowError, MemoryError,
+            UnicodeDecodeError, struct.error) as exc:
+        raise IntegrityError(f"corrupt synopsis stream: {exc!r}") from exc
+
+
+def _decode_payload(data: bytes, vectorized: bool) -> PairwiseHist:
     r = (FastBitReader if vectorized else BitReader)(data)
     magic = r.read_bytes(4)
     if magic != _MAGIC:
-        raise ValueError("bad synopsis magic")
+        raise IntegrityError("bad synopsis magic")
     n_rows = r.read_varint()
     n_sampled = r.read_varint()
     d = r.read_varint()
@@ -625,17 +716,26 @@ def blob_info(data: bytes) -> dict:
 
     Reads only the fixed-size preamble, so the cold catalog can report
     synopsis-bytes telemetry for registered blobs it has not decoded yet.
+    Framed blobs are checksum-verified first; corruption raises
+    ``IntegrityError``.
     """
-    r = BitReader(data)
-    magic = r.read_bytes(4)
-    if magic != _MAGIC:
-        raise ValueError("bad synopsis magic")
-    return {
-        "bytes": len(data),
-        "n_rows": r.read_varint(),
-        "n_sampled": r.read_varint(),
-        "d": r.read_varint(),
-    }
+    payload = unframe_blob(data)
+    try:
+        r = BitReader(payload)
+        magic = r.read_bytes(4)
+        if magic != _MAGIC:
+            raise IntegrityError("bad synopsis magic")
+        return {
+            "bytes": len(data),
+            "framed": bytes(data[:4]) == _FRAME_MAGIC,
+            "n_rows": r.read_varint(),
+            "n_sampled": r.read_varint(),
+            "d": r.read_varint(),
+        }
+    except IntegrityError:
+        raise
+    except (ValueError, IndexError, OverflowError, struct.error) as exc:
+        raise IntegrityError(f"corrupt synopsis header: {exc!r}") from exc
 
 
 def eq12_bound(ph: PairwiseHist) -> int:

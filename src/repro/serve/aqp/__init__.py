@@ -8,11 +8,14 @@ plan-shape waves whose hot path is one fused kernel launch per group
 (GROUP BY queries included, via planning-time leaf expansion). See
 ``docs/serving.md`` for the full reference.
 """
-from repro.core.query import AdmissionRejected  # noqa: F401
+from repro.core.query import (AdmissionRejected,  # noqa: F401
+                              DeadlineExceeded, QueryError)
+from repro.serve.aqp import faults  # noqa: F401
 from repro.serve.aqp.cache import LRUCache, normalize_sql  # noqa: F401
-from repro.serve.aqp.catalog import ColdTable, TableCatalog  # noqa: F401
-from repro.serve.aqp.metrics import (AdmissionMetrics, Metrics,  # noqa: F401
-                                     TableMetrics)
+from repro.serve.aqp.catalog import (ColdTable,  # noqa: F401
+                                     TableCatalog, TableQuarantinedError)
+from repro.serve.aqp.metrics import (AdmissionMetrics,  # noqa: F401
+                                     FaultMetrics, Metrics, TableMetrics)
 from repro.serve.aqp.scheduler import (BatchScheduler,  # noqa: F401
                                        StreamingAdmission)
 from repro.serve.aqp.server import AQPServer, QueryFuture  # noqa: F401

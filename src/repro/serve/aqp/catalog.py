@@ -28,6 +28,19 @@ from repro.core.build import build_pairwise_hist
 from repro.core.query import PlanError, QueryEngine
 from repro.core.types import BuildParams
 
+import repro.serve.aqp.faults as faults
+
+
+class TableQuarantinedError(RuntimeError):
+    """The cold table's blob repeatedly failed to decode and is quarantined.
+
+    Raised (typed, fast — no decode re-attempt while the circuit breaker
+    is open) by every access that needs the engine. Recover by fixing the
+    blob and re-registering the table, by ``reset_faults()``, or
+    automatically after ``breaker_reset_s`` elapses (half-open retry).
+    Queriers see this as a failed future, never a hang.
+    """
+
 
 class ColdTable:
     """A storage-tier table: bit-packed synopsis blob, decoded lazily.
@@ -54,17 +67,38 @@ class ColdTable:
     tables (taking their locks) from inside the callback.
     """
 
+    BACKOFF_CAP_S = 1.0
+
     def __init__(self, blob: bytes, compressed=None,
                  params: BuildParams | None = None, fastpath=None,
-                 decode_cb=None):
-        storagemod.blob_info(blob)          # validate the magic up front
+                 decode_cb=None, decode_retries: int = 2,
+                 decode_backoff_s: float = 0.01,
+                 breaker_reset_s: float = 0.0, fault_cb=None):
+        storagemod.blob_info(blob)   # verify frame checksum + magic up front
         self.blob = bytes(blob)
         self.compressed = compressed
         self.params = params
         self.fastpath = fastpath
         self.decode_cb = decode_cb
+        # Resilience policy: a failed decode is retried decode_retries
+        # times with capped exponential backoff (decode_backoff_s base);
+        # when every attempt fails the table quarantines — the circuit
+        # breaker makes subsequent accesses raise TableQuarantinedError
+        # immediately instead of hammering the broken blob. breaker_reset_s
+        # > 0 allows a half-open re-attempt after that long.
+        self.decode_retries = max(int(decode_retries), 0)
+        self.decode_backoff_s = max(float(decode_backoff_s), 0.0)
+        self.breaker_reset_s = float(breaker_reset_s)
+        # fault_cb(event, n, exc) with event in {"decode_retry",
+        # "quarantine"}: the server wires fault telemetry (counters +
+        # trace instants) here. Runs under the table lock; must not take
+        # table locks itself.
+        self.fault_cb = fault_cb
         self.decode_count = 0
         self.demote_count = 0
+        self.decode_failures = 0
+        self._fault: Exception | None = None
+        self._fault_t = 0.0
         self._lock = threading.Lock()
         # Rebuilds serialize on their own lock so a slow older build can
         # never overwrite a newer publication (epochs are claimed before
@@ -120,6 +154,17 @@ class ColdTable:
 
     # ------------------------------------------------------------- lifecycle
 
+    def _check_breaker(self):
+        """Raise fast while quarantined; allow a half-open retry after
+        ``breaker_reset_s`` (caller holds the lock)."""
+        if self._fault is None:
+            return
+        if self.breaker_reset_s > 0 and \
+                time.perf_counter() - self._fault_t >= self.breaker_reset_s:
+            return                    # half-open: permit a fresh attempt
+        raise TableQuarantinedError(
+            f"cold table quarantined (circuit open): {self._fault!r}")
+
     def _decode(self) -> tuple:
         """Decode the blob under the lock (double-checked): concurrent first
         readers block here and then all see the same published tuple.
@@ -127,13 +172,47 @@ class ColdTable:
         Returns the locally published tuple (not a re-read of
         ``_published``) so a demote racing in right after the decode cannot
         hand the caller a cold ``(None, epoch)`` — the in-flight query keeps
-        the engine it decoded."""
+        the engine it decoded.
+
+        Decode failures retry with capped exponential backoff; when every
+        attempt fails the table quarantines (``TableQuarantinedError``,
+        typed and immediate for queriers — never a hang) and the circuit
+        breaker short-circuits further attempts until reset."""
         with self._lock:
             pub = self._published
             if pub[0] is not None:
                 return pub
-            t0 = time.perf_counter()
-            ph = storagemod.decode(self.blob)
+            self._check_breaker()
+            ph = None
+            last: Exception | None = None
+            attempts = self.decode_retries + 1
+            for attempt in range(attempts):
+                if attempt:
+                    time.sleep(min(
+                        self.decode_backoff_s * (2 ** (attempt - 1)),
+                        self.BACKOFF_CAP_S))
+                    if self.fault_cb is not None:
+                        self.fault_cb("decode_retry", attempt, last)
+                t0 = time.perf_counter()
+                try:
+                    faults.hook("blob_read")
+                    blob = self.blob
+                    faults.hook("cold_decode")
+                    ph = storagemod.decode(blob)
+                    break
+                except Exception as exc:
+                    last = exc
+                    self.decode_failures += 1
+            if ph is None:
+                self._fault = last
+                self._fault_t = time.perf_counter()
+                if self.fault_cb is not None:
+                    self.fault_cb("quarantine", attempts, last)
+                raise TableQuarantinedError(
+                    f"cold table blob failed to decode after {attempts} "
+                    f"attempts (re-register or reset_faults() to recover): "
+                    f"{last!r}") from last
+            self._fault = None
             engine = QueryEngine(ph, fastpath=self.fastpath)
             decode_s = time.perf_counter() - t0
             self.decode_count += 1
@@ -179,6 +258,17 @@ class ColdTable:
     def resident_bytes(self) -> int:
         """Decoded-engine footprint right now (0 while cold/demoted)."""
         return self._engine_nbytes if self._published[0] is not None else 0
+
+    @property
+    def quarantined(self) -> bool:
+        """True while the decode circuit breaker is open."""
+        return self._fault is not None
+
+    def reset_faults(self):
+        """Close the circuit breaker so the next access re-attempts the
+        decode (operator override; re-registering the table also works)."""
+        with self._lock:
+            self._fault = None
 
     def rebuild(self, params: BuildParams | None = None) -> "ColdTable":
         """Rebuild the synopsis GD-natively from the attached
@@ -229,6 +319,8 @@ class ColdTable:
         info["decode_count"] = self.decode_count
         info["demote_count"] = self.demote_count
         info["resident_bytes"] = self.resident_bytes
+        info["quarantined"] = self.quarantined
+        info["decode_failures"] = self.decode_failures
         return info
 
 
@@ -267,12 +359,20 @@ class TableCatalog:
 
     def register_cold(self, name: str, blob: bytes, compressed=None,
                       params: BuildParams | None = None, fastpath=None,
-                      decode_cb=None) -> ColdTable:
+                      decode_cb=None, decode_retries: int = 2,
+                      decode_backoff_s: float = 0.01,
+                      breaker_reset_s: float = 0.0,
+                      fault_cb=None) -> ColdTable:
         """Register a storage-tier table: a bit-packed synopsis blob (plus
         optionally its ``CompressedTable`` for GD-native rebuilds) that
-        decodes lazily on first query — see ``ColdTable``."""
+        decodes lazily on first query — see ``ColdTable``. The retry /
+        backoff / breaker knobs and ``fault_cb`` configure decode
+        resilience (see ``docs/robustness.md``)."""
         cold = ColdTable(blob, compressed=compressed, params=params,
-                         fastpath=fastpath, decode_cb=decode_cb)
+                         fastpath=fastpath, decode_cb=decode_cb,
+                         decode_retries=decode_retries,
+                         decode_backoff_s=decode_backoff_s,
+                         breaker_reset_s=breaker_reset_s, fault_cb=fault_cb)
         with self._reglock:
             self._tables[name] = cold
         return cold

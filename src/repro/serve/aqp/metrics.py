@@ -347,6 +347,64 @@ class ColdTierMetrics:
             }
 
 
+class FaultMetrics:
+    """Failure-containment counters (see ``docs/robustness.md``).
+
+    Every contained failure increments exactly one primary counter:
+    ``query_errors`` (futures resolved with a typed ``QueryError``),
+    ``quarantined`` (quarantine events — a poison query or a cold table
+    entering quarantine), ``deadline_expired`` (futures resolved with
+    ``DeadlineExceeded``), ``decode_retries`` (cold decode attempts
+    retried after a failure), plus supporting ``exec_retries`` (waves
+    re-run after an execution failure) and ``worker_restarts`` is
+    reported by the admission queue itself.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n_query_errors = 0
+        self.n_quarantined = 0
+        self.n_deadline_expired = 0
+        self.n_decode_retries = 0
+        self.n_exec_retries = 0
+
+    def record_query_error(self):
+        """One future resolved with a typed ``QueryError`` result."""
+        with self._lock:
+            self.n_query_errors += 1
+
+    def record_quarantined(self):
+        """One quarantine event (query statement or cold table)."""
+        with self._lock:
+            self.n_quarantined += 1
+
+    def record_deadline_expired(self):
+        """One future resolved with a ``DeadlineExceeded`` result."""
+        with self._lock:
+            self.n_deadline_expired += 1
+
+    def record_decode_retry(self):
+        """One cold-decode attempt retried after a failure."""
+        with self._lock:
+            self.n_decode_retries += 1
+
+    def record_exec_retry(self):
+        """One submission re-enqueued after a wave execution failure."""
+        with self._lock:
+            self.n_exec_retries += 1
+
+    def snapshot(self) -> dict:
+        """Point-in-time fault-counter dict."""
+        with self._lock:
+            return {
+                "query_errors": self.n_query_errors,
+                "quarantined": self.n_quarantined,
+                "deadline_expired": self.n_deadline_expired,
+                "decode_retries": self.n_decode_retries,
+                "exec_retries": self.n_exec_retries,
+            }
+
+
 class Metrics:
     """Per-table ``TableMetrics`` + admission stats + server-wide totals."""
 
@@ -357,6 +415,7 @@ class Metrics:
         self.admission = AdmissionMetrics(reservoir)
         self.stages = StageMetrics(reservoir)
         self.cold = ColdTierMetrics()
+        self.faults = FaultMetrics()
 
     def table(self, name: str) -> TableMetrics:
         """The (lazily created) ``TableMetrics`` for ``name``."""
@@ -385,6 +444,7 @@ class Metrics:
                 / max(sum(t["queries_executed"] for t in out.values()), 1)),
             "admission": self.admission.snapshot(),
             "stages": self.stages.snapshot(),
+            "faults": self.faults.snapshot(),
         }
         if plan_cache is not None:
             totals["plan_cache"] = plan_cache.stats()

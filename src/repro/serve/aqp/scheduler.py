@@ -45,6 +45,8 @@ import time
 from repro.core.fastpath import FastPath
 from repro.core.query import QueryPlan, QueryResult
 
+import repro.serve.aqp.faults as faults
+
 
 @dataclasses.dataclass
 class ScheduledResult:
@@ -73,8 +75,10 @@ class DrainStats:
 
     Attributes:
         cause: ``"full"`` (queue reached ``max_batch``), ``"flush"``
-            (explicit flush / synchronous wrapper), or ``"timeout"``
-            (``max_wait_ms`` elapsed with a partial group).
+            (explicit flush / synchronous wrapper), ``"timeout"``
+            (``max_wait_ms`` elapsed with a partial group), or
+            ``"deadline"`` (a queued item's per-query deadline is at risk,
+            so the wave stops filling and fires early).
         size: number of submissions drained into this wave.
         depth: queue depth observed at drain time (``size`` plus whatever
             stayed behind because of ``max_batch``).
@@ -162,11 +166,17 @@ class StreamingAdmission:
     def __init__(self, execute_cb, max_wait_ms: float = 2.0,
                  max_batch: int = 64, max_queue_depth: int = 0,
                  shed_policy: str = "reject", shed_cb=None, tracer=None,
-                 idle_cb=None):
+                 idle_cb=None, error_cb=None):
         if shed_policy not in SHED_POLICIES:
             raise ValueError(f"unknown shed_policy {shed_policy!r}; "
                              f"expected one of {SHED_POLICIES}")
         self.execute_cb = execute_cb
+        # Supervision hook: when execute_cb raises, the worker survives and
+        # hands the wave to error_cb(batch, exc) so the server can resolve
+        # every future with a typed result (never a hang, never a dead
+        # loop). error_cb itself is guarded — a raising error handler
+        # cannot kill the worker either.
+        self.error_cb = error_cb
         # Optional between-waves hook on the worker thread (the server wires
         # the cold-tier memory governor here): runs after each wave's
         # execute_cb returns, never concurrently with one, and exceptions
@@ -181,6 +191,11 @@ class StreamingAdmission:
         self.shed_policy = shed_policy
         self.shed_cb = shed_cb or (lambda item, reason, depth: None)
         self.high_water = 0
+        # Watchdog: number of times a dead worker thread was replaced (a
+        # BaseException escaped the wave guard, e.g. an injected worker
+        # crash). Un-executed wave items are restored to the queue front
+        # before the restart, preserving the exactly-once contract.
+        self.restarts = 0
         self._q: collections.deque = collections.deque()
         self._cv = threading.Condition()
         self._flush = False
@@ -203,10 +218,7 @@ class StreamingAdmission:
         with self._cv:
             if self._stop:
                 raise RuntimeError("admission queue is closed")
-            if self._thread is None:
-                self._thread = threading.Thread(
-                    target=self._loop, name="aqp-admission", daemon=True)
-                self._thread.start()
+            self._ensure_worker()
             bound = self.max_queue_depth
             if bound > 0 and len(self._q) >= bound:
                 if self.shed_policy == "block":
@@ -242,6 +254,7 @@ class StreamingAdmission:
         with self._cv:
             if self._stop:
                 raise RuntimeError("admission queue is closed")
+            self._ensure_worker()
             self._q.appendleft((t_submit, item))
             self.high_water = max(self.high_water, len(self._q))
             self._cv.notify_all()
@@ -250,6 +263,7 @@ class StreamingAdmission:
         """Drain the current queue immediately (no-op when empty)."""
         with self._cv:
             if self._q:
+                self._ensure_worker()
                 self._flush = True
                 self._cv.notify_all()
 
@@ -270,8 +284,38 @@ class StreamingAdmission:
 
     # ----------------------------------------------------------------- worker
 
+    def _ensure_worker(self):
+        """Start the worker lazily; restart it if it died (watchdog).
+
+        Caller holds ``self._cv``. A replacement after a hard death (a
+        ``BaseException`` that escaped the wave guard) counts in
+        ``restarts``; ``_loop`` restores un-executed items to the queue
+        front before dying, so nothing is lost across the restart.
+        """
+        if self._thread is not None and not self._thread.is_alive():
+            self._thread = None
+            self.restarts += 1
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._loop, name="aqp-admission", daemon=True)
+            self._thread.start()
+
+    def _queue_deadline(self):
+        """Earliest per-item ``deadline_at`` among queued items, or None."""
+        qdl = None
+        for _, item in self._q:
+            dl = getattr(item, "deadline_at", None)
+            if dl is not None and (qdl is None or dl < qdl):
+                qdl = dl
+        return qdl
+
     def _collect(self):
-        """Block until a wave is due; returns (batch, DrainStats) or None."""
+        """Block until a wave is due; returns (pairs, DrainStats) or None.
+
+        ``pairs`` keeps the ``(t_submit, item)`` tuples so a crashing
+        worker can restore un-executed items to the queue front with their
+        original submit times intact.
+        """
         with self._cv:
             while not self._q:
                 self._flush = False         # flush on empty queue: no-op
@@ -279,8 +323,13 @@ class StreamingAdmission:
                     return None
                 self._cv.wait()
             # Admission policy: the wave fires on whichever of max_batch /
-            # flush / oldest-waited-max_wait_ms trips first.
-            deadline = self._q[0][0] + self.max_wait_ms / 1e3
+            # flush / oldest-waited-max_wait_ms trips first — or early,
+            # with cause "deadline", when a queued item's per-query
+            # deadline would expire before the normal wave fire time (the
+            # drain stops adding to a wave whose oldest deadline is at
+            # risk).
+            margin = self.max_wait_ms / 1e3
+            deadline = self._q[0][0] + margin
             cause = "timeout"
             while True:
                 if len(self._q) >= self.max_batch:
@@ -289,8 +338,16 @@ class StreamingAdmission:
                 if self._flush or self._stop:
                     cause = "flush"
                     break
-                remaining = deadline - time.perf_counter()
+                wake = deadline
+                at_risk = False
+                qdl = self._queue_deadline()
+                if qdl is not None and qdl - margin < wake:
+                    wake = qdl - margin
+                    at_risk = True
+                remaining = wake - time.perf_counter()
                 if remaining <= 0:
+                    if at_risk:
+                        cause = "deadline"
                     break
                 self._cv.wait(remaining)
             self._flush = False
@@ -298,7 +355,7 @@ class StreamingAdmission:
             take = min(depth, self.max_batch)
             now = time.perf_counter()
             waited = now - self._q[0][0]
-            batch = [self._q.popleft()[1] for _ in range(take)]
+            pairs = [self._q.popleft() for _ in range(take)]
             self._cv.notify_all()   # wake producers blocked on a full queue
         stats = DrainStats(cause, take, depth, waited)
         if self.tracer is not None and self.tracer.enabled:
@@ -306,19 +363,68 @@ class StreamingAdmission:
                 "drain", track="admission",
                 attrs={"cause": cause, "size": take, "depth": depth,
                        "oldest_wait_ms": waited * 1e3})
-        return batch, stats
+        return pairs, stats
 
     def _loop(self):
         while True:
             wave = self._collect()
             if wave is None:
                 return
-            self.execute_cb(*wave)
+            pairs, stats = wave
+            try:
+                faults.hook("worker")
+            except Exception:
+                # Simulated worker death before the wave ran: nothing was
+                # executed, so the whole wave re-enters the queue and the
+                # replacement worker drains it. Exit quietly — the crash is
+                # already accounted for in ``restarts``.
+                self._revive(pairs)
+                return
+            except BaseException:
+                self._revive(pairs)
+                raise
+            batch = [item for _, item in pairs]
+            try:
+                self.execute_cb(batch, stats)
+            except Exception as exc:
+                # Supervision: a raising wave must not kill the drain loop
+                # or strand its futures. The server's error_cb resolves
+                # them with typed QueryError results (or retries).
+                if self.error_cb is not None:
+                    try:
+                        self.error_cb(batch, exc)
+                    except Exception:
+                        pass
+            except BaseException:
+                # Hard death (interpreter shutdown, injected worker crash
+                # mid-wave): the wave may be partially executed, so it is
+                # NOT restored — already-resolved futures stay resolved,
+                # and the watchdog replaces the worker for queued items.
+                self._revive(())
+                raise
             if self.idle_cb is not None:
                 try:
                     self.idle_cb()
                 except Exception:
                     pass
+
+    def _revive(self, pairs):
+        """Restore un-executed wave items and spawn a replacement worker.
+
+        Called on the dying worker thread itself. ``pairs`` (possibly
+        empty) re-enter at the queue FRONT in their original order with
+        original submit times — they were handed to neither ``execute_cb``
+        nor ``shed_cb``, so exactly-once is preserved across the restart.
+        """
+        with self._cv:
+            self._q.extendleft(reversed(pairs))
+            self.high_water = max(self.high_water, len(self._q))
+            if not self._stop:
+                self.restarts += 1
+                self._thread = threading.Thread(
+                    target=self._loop, name="aqp-admission", daemon=True)
+                self._thread.start()
+            self._cv.notify_all()
 
 
 class BatchScheduler:
@@ -441,6 +547,7 @@ class BatchScheduler:
         t0 = time.perf_counter()
         triples = None
         if len(live) > 0 and self.fastpath is not None:
+            faults.hook("kernel_launch")
             trees = [items[idx][1].tree for idx in live]
             if tracing and self.tracer.annotate_jax:
                 import jax.profiler

@@ -77,15 +77,19 @@ import threading
 import time
 
 from repro.core import sql as sqlmod
-from repro.core.query import (AdmissionRejected, PlanError, QueryPlan,
-                              QueryResult, assemble_groups)
+from repro.core.query import (AdmissionRejected, DeadlineExceeded, PlanError,
+                              QueryError, QueryPlan, QueryResult,
+                              assemble_groups)
 from repro.obs.export import spans_to_events, trace_json, write_trace
 from repro.obs.trace import QueryTrace, Tracer
 from repro.serve.aqp.cache import LRUCache, normalize_sql
-from repro.serve.aqp.catalog import ColdTable, TableCatalog
+from repro.serve.aqp.catalog import (ColdTable, TableCatalog,
+                                     TableQuarantinedError)
 from repro.serve.aqp.metrics import Metrics
 from repro.serve.aqp.scheduler import (BatchScheduler, PlannerPool,
                                        StreamingAdmission)
+
+import repro.serve.aqp.faults as faults
 
 
 class QueryFuture(concurrent.futures.Future):
@@ -124,6 +128,9 @@ class _Submission:
     trace: QueryTrace | None = None  # per-query trace (tracing enabled only)
     template: object = None          # PlanTemplate (deferred-bind hits only)
     literals: tuple | None = None    # fingerprint literal vector (ditto)
+    deadline_at: float | None = None  # perf_counter deadline (deadline_ms)
+    exec_failures: int = 0           # wave execution failures (bounded retry)
+    requeued: bool = False           # True while re-admitted to the queue
 
 
 def _leaf_key(plan: QueryPlan) -> str:
@@ -196,6 +203,16 @@ class AQPServer:
     # latency crossed ``slow_query_ms`` (a window, like the span ring).
     SLOW_LOG_CAP = 256
 
+    # A query whose wave raises this many times is quarantined: its futures
+    # resolve with a typed QueryError and re-submissions of the same
+    # normalized text are refused until the quarantine clears (a poison
+    # query is contained, not retried forever).
+    MAX_EXEC_FAILURES = 2
+
+    # Bounded quarantine map (norm -> cause): oldest entries fall out so a
+    # hostile workload cannot grow server state without bound.
+    QUARANTINE_CAP = 1024
+
     def __init__(self, catalog: TableCatalog | None = None,
                  mode: str | None = None,
                  plan_cache_size: int = 4096,
@@ -229,7 +246,8 @@ class AQPServer:
                                             shed_policy=shed_policy,
                                             shed_cb=self._on_shed,
                                             tracer=self.tracer,
-                                            idle_cb=self._govern_cold)
+                                            idle_cb=self._govern_cold,
+                                            error_cb=self._on_wave_error)
         self.plan_cache = LRUCache(plan_cache_size)
         self.result_cache = LRUCache(result_cache_size,
                                      max_bytes=max_result_bytes)
@@ -251,6 +269,11 @@ class AQPServer:
         self._plan_lock = (self._state_lock if single_lock
                            else threading.RLock())
         self._inflight: dict[str, _Submission] = {}
+        # norm -> (table, cause): statements refused after repeated
+        # execution failure. Guarded by _state_lock; bounded; cleared by
+        # clear_quarantine(), an epoch bump on the table (_purge), or
+        # falling off the cap.
+        self._quarantine: collections.OrderedDict = collections.OrderedDict()
 
     # ------------------------------------------------------------ registration
 
@@ -270,23 +293,45 @@ class AQPServer:
         return self
 
     def register_cold(self, name: str, blob: bytes, compressed=None,
-                      params=None, fastpath=None) -> "AQPServer":
+                      params=None, fastpath=None, decode_retries: int = 2,
+                      decode_backoff_s: float = 0.01,
+                      breaker_reset_s: float = 0.0) -> "AQPServer":
         """Register a cold (storage-tier) table: a bit-packed synopsis blob
         that decodes lazily on the first query against it. The decode
         latency and blob size land in this table's metrics (``stats()``
         ``"cold"`` section); ``compressed`` (a ``CompressedTable``) enables
         GD-native ``rebuild`` on the returned catalog entry.
 
-        The blob is validated (magic check inside ``ColdTable``) *before*
-        any telemetry is recorded, so a rejected registration leaves no
-        phantom metrics entry behind."""
+        The blob is validated (integrity frame + magic, inside
+        ``ColdTable``) *before* any telemetry is recorded, so a rejected
+        registration leaves no phantom metrics entry behind. The retry /
+        backoff / breaker knobs configure decode resilience (retries, then
+        quarantine with a typed error — see ``docs/robustness.md``); fault
+        events land in ``stats()["totals"]["faults"]`` and on the trace
+        ring's "faults" lane."""
         cold = self.catalog.register_cold(
             name, blob, compressed=compressed, params=params,
             fastpath=fastpath,
-            decode_cb=lambda n, s, name=name: self._on_cold_decode(name, n, s))
+            decode_cb=lambda n, s, name=name: self._on_cold_decode(name, n, s),
+            decode_retries=decode_retries, decode_backoff_s=decode_backoff_s,
+            breaker_reset_s=breaker_reset_s,
+            fault_cb=lambda ev, n, exc, name=name:
+                self._on_cold_fault(name, ev, n, exc))
         self.metrics.table(name).record_cold_register(len(blob))
         self._wire(name, cold)
         return self
+
+    def _on_cold_fault(self, name: str, event: str, n: int, exc):
+        """ColdTable fault callback: decode retries and quarantine events
+        into the fault counters and the trace ring's "faults" lane."""
+        if event == "decode_retry":
+            self.metrics.faults.record_decode_retry()
+        else:                              # "quarantine"
+            self.metrics.faults.record_quarantined()
+        if self.tracer.enabled:
+            self.tracer.instant(event, track="faults",
+                                attrs={"table": name, "attempt": n,
+                                       "error": repr(exc)})
 
     def _wire(self, name: str, framework):
         old = self._wiring.pop(name, None)
@@ -409,10 +454,16 @@ class AQPServer:
             self.template_cache.purge_table(name)
         with self._state_lock:
             self.result_cache.purge_table(name)
+            # An epoch bump (rebuild / re-register) gives quarantined
+            # statements against this table a fresh chance.
+            for norm in [n for n, (t, _) in self._quarantine.items()
+                         if t == name]:
+                del self._quarantine[norm]
 
     # ----------------------------------------------------------------- queries
 
-    def submit(self, sql_text: str) -> QueryFuture:
+    def submit(self, sql_text: str,
+               deadline_ms: float | None = None) -> QueryFuture:
         """Enqueue one query; returns immediately with a ``QueryFuture``.
 
         Planning (cached), result-cache lookup and in-flight deduplication
@@ -424,6 +475,16 @@ class AQPServer:
         ``AdmissionRejected`` result per ``shed_policy``; otherwise the
         query enters the queue and resolves when its wave completes.
 
+        ``deadline_ms`` attaches a per-query deadline: the drain policy
+        fires a wave early rather than let the deadline expire in the
+        queue, and a query whose deadline has passed by the time its wave
+        starts skips execution and resolves with a typed
+        ``DeadlineExceeded`` result. Deadline-carrying submissions skip
+        in-flight deduplication (each deadline is its own contract); they
+        still hit the result cache. A statement quarantined after
+        repeated execution failures resolves immediately with a typed
+        ``QueryError`` (``kind="quarantined"``).
+
         On the lock-split path the expensive planning step runs with no
         server lock held; only the dedupe check / admission bookkeeping
         take the short state lock.
@@ -431,20 +492,33 @@ class AQPServer:
         fut = QueryFuture(sql_text)
         t_submit = time.perf_counter()
         norm = normalize_sql(sql_text)
+        deadline_at = (t_submit + deadline_ms / 1e3
+                       if deadline_ms is not None else None)
         # Per-query trace only when tracing: the disabled path pays no
         # allocation beyond the future itself.
         trace = QueryTrace(t_submit) if self.tracer.enabled else None
         sub = None
         with self._state_lock:
             self.metrics.admission.record_submit()
-            inflight = self._inflight.get(norm)
-            if inflight is not None:          # identical query already queued
-                inflight.futures.append(fut)
-                return fut
-            if self.single_lock:              # legacy: plan under the lock
-                sub = self._plan_admit(fut, norm, t_submit, trace)
+            quarantined = self._quarantine.get(norm)
+            if quarantined is not None:
+                self.metrics.faults.record_query_error()
+            else:
+                inflight = (self._inflight.get(norm)
+                            if deadline_at is None else None)
+                if inflight is not None:      # identical query already queued
+                    inflight.futures.append(fut)
+                    return fut
+                if self.single_lock:          # legacy: plan under the lock
+                    sub = self._plan_admit(fut, norm, t_submit, trace,
+                                           deadline_at)
+        if quarantined is not None:
+            fut.set_result(QueryError(
+                error=quarantined[1], kind="quarantined",
+                retries=self.MAX_EXEC_FAILURES))
+            return fut
         if not self.single_lock:
-            sub = self._plan_admit(fut, norm, t_submit, trace)
+            sub = self._plan_admit(fut, norm, t_submit, trace, deadline_at)
         if sub is not None:
             self._enqueue(sub)
         return fut
@@ -505,7 +579,8 @@ class AQPServer:
     # ------------------------------------------------------ submit-side helpers
 
     def _plan_admit(self, fut: QueryFuture, norm: str, t_submit: float,
-                    trace: QueryTrace | None = None) -> _Submission | None:
+                    trace: QueryTrace | None = None,
+                    deadline_at: float | None = None) -> _Submission | None:
         """Plan ``norm`` (fast path first), then admit it.
 
         Resolution order: exact-text plan cache -> template cache (zero
@@ -517,12 +592,13 @@ class AQPServer:
         """
         fast = self._plan_fast(norm)
         if fast is not None:
-            return self._admit(fut, norm, t_submit, trace, *fast)
+            return self._admit(fut, norm, t_submit, trace, deadline_at,
+                               *fast)
         if self._planner is not None:
             self._planner.submit(self._plan_async, fut, norm, t_submit,
-                                 trace)
+                                 trace, deadline_at)
             return None
-        return self._plan_cold_admit(fut, norm, t_submit, trace)
+        return self._plan_cold_admit(fut, norm, t_submit, trace, deadline_at)
 
     def _plan_fast(self, norm: str):
         """Lock-cheap planner fast path: exact-text plan-cache hit, else
@@ -550,26 +626,29 @@ class AQPServer:
         return None
 
     def _plan_cold_admit(self, fut: QueryFuture, norm: str, t_submit: float,
-                         trace: QueryTrace | None) -> _Submission | None:
+                         trace: QueryTrace | None,
+                         deadline_at: float | None = None
+                         ) -> _Submission | None:
         """Cold-plan ``norm`` (parse + plan + template compile), then admit."""
         try:
             table, plan, epoch = self._plan_cold(norm)
         except Exception as exc:          # PlanError / stale RuntimeError
             fut.set_exception(exc)
             return None
-        return self._admit(fut, norm, t_submit, trace, table, plan, epoch,
-                           "full", None, None)
+        return self._admit(fut, norm, t_submit, trace, deadline_at, table,
+                           plan, epoch, "full", None, None)
 
     def _plan_async(self, fut: QueryFuture, norm: str, t_submit: float,
-                    trace: QueryTrace | None):
+                    trace: QueryTrace | None,
+                    deadline_at: float | None = None):
         """Planner-pool job: cold-plan, admit, enqueue (worker thread)."""
-        sub = self._plan_cold_admit(fut, norm, t_submit, trace)
+        sub = self._plan_cold_admit(fut, norm, t_submit, trace, deadline_at)
         if sub is not None:
             self._enqueue(sub)
 
     def _admit(self, fut: QueryFuture, norm: str, t_submit: float,
-               trace: QueryTrace | None, table: str,
-               plan: QueryPlan | None, epoch: int, path: str,
+               trace: QueryTrace | None, deadline_at: float | None,
+               table: str, plan: QueryPlan | None, epoch: int, path: str,
                template, literals) -> _Submission | None:
         """Admit a planned (or template-deferred) query under a short
         state-lock section.
@@ -585,7 +664,8 @@ class AQPServer:
             trace.plan_path = path
         hit = None
         with self._state_lock:
-            inflight = self._inflight.get(norm)
+            inflight = (self._inflight.get(norm)
+                        if deadline_at is None else None)
             if inflight is not None:      # planned concurrently: attach
                 inflight.futures.append(fut)
                 return None
@@ -597,12 +677,14 @@ class AQPServer:
                 self.result_cache.miss(table)
                 sub = _Submission(norm, table, plan, epoch, t_submit, [fut],
                                   trace=trace, template=template,
-                                  literals=literals)
+                                  literals=literals, deadline_at=deadline_at)
                 if plan is not None and plan.leaf_plans:
                     self._lookup_leaves(sub)
                     if not sub.missing:   # every leaf served from cache
                         hit = self._finish_cached_group(sub)
-                if hit is None:
+                if hit is None and deadline_at is None:
+                    # Deadline-carrying submissions are never dedupe
+                    # targets: each deadline is its own contract.
                     self._inflight[norm] = sub
         if hit is not None:
             if trace is not None:
@@ -628,6 +710,10 @@ class AQPServer:
         already-admitted query)."""
         try:
             if requeue:
+                # Marks the submission as queue-owned again: a wave-level
+                # error callback skips requeued items (the next wave, not
+                # the supervisor, owns their resolution).
+                sub.requeued = True
                 self.admission.requeue(sub, sub.t_submit)
             else:
                 self.admission.submit(sub, sub.t_submit)
@@ -679,6 +765,7 @@ class AQPServer:
         race benignly: both plans are identical and the puts are
         idempotent.
         """
+        faults.hook("planner")
         parsed = sqlmod.parse_sql(norm)
         table = parsed.table
         with self._plan_lock:
@@ -779,6 +866,13 @@ class AQPServer:
         re-plan, the scheduler execution and the future resolution all run
         outside it, so submitters are never blocked behind a wave.
         """
+        # Drained items are worker-owned now; clearing the requeue flag
+        # FIRST means a wave-level crash (including the injected
+        # wave_execute fault below) routes every un-requeued item through
+        # the supervisor exactly once.
+        for sub in batch:
+            sub.requeued = False
+        faults.hook("wave_execute")
         now = time.perf_counter()
         with self._state_lock:
             self.metrics.admission.record_drain(drain)
@@ -789,6 +883,15 @@ class AQPServer:
                 sub.trace.t_drained = now
                 sub.trace.drain_cause = drain.cause
                 sub.trace.wave_size = drain.size
+        # Per-query deadlines: a submission whose deadline passed while it
+        # sat in the queue skips the fused launch entirely and resolves
+        # with a typed DeadlineExceeded result.
+        expired = [sub for sub in batch
+                   if sub.deadline_at is not None and now >= sub.deadline_at]
+        if expired:
+            gone = {id(s) for s in expired}
+            batch = [sub for sub in batch if id(sub) not in gone]
+            self._resolve_expired(expired)
         prefailed: dict[int, Exception] = {}
         for sub in batch:
             if sub.epoch != self.catalog.epoch(sub.table):
@@ -868,11 +971,14 @@ class AQPServer:
 
         leaf_out: dict[int, dict] = {}         # id(sub) -> {leaf_idx: sr}
         failed = dict(prefailed)               # id(sub) -> first error
-        direct: dict[int, object] = {}         # id(sub) -> ScheduledResult
+        exec_failed: set[int] = set()          # failed during EXECUTION:
+        direct: dict[int, object] = {}         # retry/quarantine, not raise
         stale: set[int] = set()                # id(sub) -> re-enqueue
         for k, (sub, leaf_idx) in enumerate(slots):
             if k in errors:
-                failed.setdefault(id(sub), errors[k])
+                if id(sub) not in failed:
+                    failed[id(sub)] = errors[k]
+                    exec_failed.add(id(sub))
             elif scheduled[k] is not None and scheduled[k].stale:
                 # A rebuild raced this item inside the wave: the scheduler
                 # refused to pair the old plan with the new synopsis. The
@@ -916,6 +1022,13 @@ class AQPServer:
                 self._enqueue(sub, requeue=True)
                 continue
             err = failed.get(id(sub))
+            if err is not None and id(sub) in exec_failed:
+                # Execution failures are a containment outcome, not a
+                # raise: retry once (requeue), then quarantine with a
+                # typed QueryError. Plan/bind errors above keep their
+                # exception semantics.
+                self._resolve_exec_failure(sub, err)
+                continue
             result = None
             batched = False
             if err is None and sub.plan.leaf_plans:
@@ -928,7 +1041,11 @@ class AQPServer:
                                        for sr in executed.values())
                 batched = any(sr.batched for sr in executed.values())
             with self._state_lock:
-                self._inflight.pop(sub.norm, None)
+                # Conditional pop: deadline-carrying submissions never
+                # register in the dedupe map, so an unconditional pop could
+                # detach a different submission sharing the text.
+                if self._inflight.get(sub.norm) is sub:
+                    del self._inflight[sub.norm]
                 futures = list(sub.futures)
                 if err is None:
                     if sub.plan.leaf_plans and not executed \
@@ -973,6 +1090,117 @@ class AQPServer:
                 for fut in futures[1:]:
                     fut.set_result(dataclasses.replace(result, latency_s=0.0))
 
+    def _resolve_expired(self, subs: list):
+        """Resolve deadline-expired submissions with typed
+        ``DeadlineExceeded`` results (admission-worker thread, outside any
+        server lock at resolution time)."""
+        now = time.perf_counter()
+        for sub in subs:
+            with self._state_lock:
+                if self._inflight.get(sub.norm) is sub:
+                    del self._inflight[sub.norm]
+                futures = list(sub.futures)
+                self.metrics.faults.record_deadline_expired()
+            deadline_ms = (sub.deadline_at - sub.t_submit) * 1e3
+            elapsed_ms = (now - sub.t_submit) * 1e3
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "deadline_expired", track="faults",
+                    attrs={"deadline_ms": deadline_ms,
+                           "elapsed_ms": elapsed_ms})
+            if sub.trace is not None:
+                sub.trace.t_resolved = now
+                sub.trace.emit_spans(self.tracer, sub.norm)
+            res = DeadlineExceeded(deadline_ms=deadline_ms,
+                                   elapsed_ms=elapsed_ms)
+            for fut in futures:
+                if not fut.done():
+                    fut.set_result(res)
+
+    def _resolve_exec_failure(self, sub: _Submission, exc: Exception):
+        """Contain one submission's wave-execution failure.
+
+        First failure: re-enqueue for one more attempt (the retry rides
+        the normal wave path, so a transient fault — an injected kernel
+        error, a recovered cold table — answers correctly on the retry).
+        At ``MAX_EXEC_FAILURES`` the statement quarantines: its futures
+        resolve with a typed ``QueryError`` and re-submissions are refused
+        until the quarantine clears. A ``TableQuarantinedError`` (the cold
+        table's circuit breaker is open) skips the retry — it would only
+        fail fast against the same open breaker — and quarantines the
+        statement immediately. Never raises, never hangs a future.
+        """
+        sub.exec_failures += 1
+        if isinstance(exc, TableQuarantinedError):
+            sub.exec_failures = self.MAX_EXEC_FAILURES
+        if sub.exec_failures < self.MAX_EXEC_FAILURES:
+            with self._state_lock:
+                self.metrics.faults.record_exec_retry()
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "exec_retry", track="faults",
+                    attrs={"table": sub.table, "error": repr(exc)})
+            self._enqueue(sub, requeue=True)
+            return
+        with self._state_lock:
+            if self._inflight.get(sub.norm) is sub:
+                del self._inflight[sub.norm]
+            futures = list(sub.futures)
+            self._quarantine[sub.norm] = (sub.table, repr(exc))
+            while len(self._quarantine) > self.QUARANTINE_CAP:
+                self._quarantine.popitem(last=False)
+            self.metrics.faults.record_quarantined()
+            self.metrics.faults.record_query_error()
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "quarantine", track="faults",
+                attrs={"table": sub.table, "error": repr(exc)})
+        if sub.trace is not None:
+            sub.trace.t_resolved = time.perf_counter()
+            sub.trace.emit_spans(self.tracer, sub.norm)
+        kind = ("quarantined" if isinstance(exc, TableQuarantinedError)
+                else "execution")
+        res = QueryError(error=repr(exc), kind=kind,
+                         retries=sub.exec_failures)
+        for fut in futures:
+            if not fut.done():
+                fut.set_result(res)
+
+    def _on_wave_error(self, batch: list, exc: Exception):
+        """Supervision callback: ``_execute_wave`` raised for a whole wave.
+
+        Runs on the (surviving) admission worker. Every submission that is
+        neither already resolved nor already re-admitted to the queue goes
+        through the same retry-then-quarantine containment as an isolated
+        execution failure, so a wave-level crash resolves every future
+        with a typed result instead of stranding them.
+        """
+        for sub in batch:
+            if sub.requeued:
+                continue              # queue-owned again; next wave handles
+            futures = list(sub.futures)
+            if futures and all(f.done() for f in futures):
+                continue              # already resolved (cache/expired path)
+            self._resolve_exec_failure(sub, exc)
+
+    # -------------------------------------------------------------- quarantine
+
+    def quarantined(self) -> dict:
+        """Snapshot of quarantined statements: normalized SQL ->
+        ``{"table", "error"}``."""
+        with self._state_lock:
+            return {norm: {"table": t, "error": e}
+                    for norm, (t, e) in self._quarantine.items()}
+
+    def clear_quarantine(self, norm: str | None = None):
+        """Lift the quarantine for one normalized statement (or all with
+        ``None``) so re-submissions execute again."""
+        with self._state_lock:
+            if norm is None:
+                self._quarantine.clear()
+            else:
+                self._quarantine.pop(normalize_sql(norm), None)
+
     def _finish_single(self, sub: _Submission, sr) -> QueryResult:
         """Cache + account one executed plain query (state lock held)."""
         self.result_cache.put(sub.norm, sub.table, sub.epoch, sr.result)
@@ -1012,6 +1240,10 @@ class AQPServer:
         # side only sees shed-time observations — report the max of both.
         adm["queue_high_water"] = max(adm["queue_high_water"],
                                       self.admission.high_water)
+        flt = snap["totals"]["faults"]
+        flt["worker_restarts"] = self.admission.restarts
+        with self._state_lock:
+            flt["quarantine_size"] = len(self._quarantine)
         snap["tracing"] = {
             "enabled": self.tracer.enabled,
             "spans_recorded": self.tracer.n_recorded,

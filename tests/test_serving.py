@@ -400,6 +400,74 @@ def test_register_cold_invalid_blob_leaves_no_phantom_metrics():
     srv.close()
 
 
+def test_register_cold_corrupted_blob_rejected_at_registration(cold_blob):
+    """A bit-flipped or truncated blob is refused AT registration (typed
+    IntegrityError from the frame check), before any metrics/catalog entry
+    exists — corruption is caught at the door, not at first query."""
+    from repro.core.storage import IntegrityError
+    blob, _, _ = cold_blob
+    flipped = bytearray(blob)
+    flipped[len(blob) // 2] ^= 0x10
+    for bad in (bytes(flipped), blob[: len(blob) // 2]):
+        srv = AQPServer(mode="numpy")
+        with pytest.raises(IntegrityError):
+            srv.register_cold("ghost", bad)
+        assert "ghost" not in srv.catalog
+        assert "ghost" not in srv.stats()["tables"]
+        srv.close()
+
+
+def test_cold_first_query_decode_failure_is_typed_with_telemetry(cold_blob):
+    """Decode failing on FIRST access (blob fine at registration, fault at
+    decode time) resolves typed and records retry/quarantine telemetry —
+    queriers never hang on a sick cold table."""
+    from repro.serve.aqp import TableQuarantinedError, faults
+    blob, _, _ = cold_blob
+    srv = AQPServer(mode="numpy")
+    srv.register_cold("sensors", blob, decode_retries=1,
+                      decode_backoff_s=0.001)
+    plan = faults.FaultPlan().fail("cold_decode", first=2)
+    with faults.installed(plan):
+        fut = srv.submit("SELECT COUNT(a) FROM sensors WHERE b > 100")
+        srv.flush()
+        with pytest.raises(TableQuarantinedError):
+            fut.result(timeout=30)
+    flt = srv.stats()["totals"]["faults"]
+    assert flt["decode_retries"] == 1 and flt["quarantined"] == 1
+    cold = srv.catalog.resolve("sensors")
+    assert cold.quarantined
+    assert cold.cold_info()["quarantined"] is True
+    assert cold.cold_info()["decode_failures"] == 2
+    srv.close()
+
+
+def test_cold_quarantine_reregister_recovers_cleanly(cold_blob):
+    """Quarantine -> re-register lifecycle: the replacement table serves,
+    the breaker state is gone, and no stale failure telemetry leaks into
+    the fresh table's stats."""
+    from repro.serve.aqp import TableQuarantinedError, faults
+    blob, compressed, fw = cold_blob
+    srv = AQPServer(mode="numpy")
+    srv.register_cold("sensors", blob, decode_retries=0,
+                      decode_backoff_s=0.001)
+    with faults.installed(faults.FaultPlan().fail("cold_decode", at=[0])):
+        fut = srv.submit("SELECT COUNT(a) FROM sensors WHERE b > 100")
+        srv.flush()
+        with pytest.raises(TableQuarantinedError):
+            fut.result(timeout=30)
+    srv.register_cold("sensors", blob, compressed=compressed)
+    cold = srv.catalog.resolve("sensors")
+    assert not cold.quarantined and cold.decode_failures == 0
+    sql = "SELECT COUNT(a) FROM sensors WHERE b > 100"
+    res = srv.query(sql)
+    np.testing.assert_allclose(res.as_tuple(),
+                               fw.engine.query(sql).as_tuple(),
+                               rtol=1e-9, atol=1e-9)
+    st = srv.stats()["tables"]["sensors"]["cold"]
+    assert st["decodes"] == 1
+    srv.close()
+
+
 def test_cold_rebuild_without_compressed_table_refuses(cold_blob):
     blob, _, _ = cold_blob
     cat = TableCatalog()

@@ -56,3 +56,75 @@ def test_counts_sparse_vs_dense_selection():
         _encode_counts(w, mat)
         out = _decode_counts(BitReader(w.getvalue()), mat.shape)
         np.testing.assert_allclose(out, mat)
+
+
+# ---------------------------------------------------- corruption corpus
+# Deterministic complement to the hypothesis corpus in
+# tests/test_storage_property.py (which only runs where hypothesis is
+# installed): every corruption must surface as the typed IntegrityError
+# from BOTH decoders and blob_info — wrong answers and hangs are the
+# failure modes being excluded.
+
+def _assert_rejected(data):
+    import pytest
+    for vectorized in (True, False):
+        with pytest.raises(storage.IntegrityError):
+            storage.decode(data, vectorized=vectorized)
+    with pytest.raises(storage.IntegrityError):
+        storage.blob_info(data)
+
+
+def test_corruption_bit_flips_rejected(synopsis):
+    blob = storage.encode(synopsis)
+    rng = np.random.default_rng(42)
+    # Every header byte plus a seeded payload sample: ANY single-bit flip
+    # is caught (CRC over the payload; explicit length; the PWF1/PWH1
+    # magics are 3 bits apart so no flip aliases one into the other).
+    positions = list(range(12)) + sorted(
+        int(p) for p in rng.integers(12, len(blob), 48))
+    for pos in positions:
+        bad = bytearray(blob)
+        bad[pos] ^= 1 << int(rng.integers(0, 8))
+        _assert_rejected(bytes(bad))
+
+
+def test_corruption_truncations_rejected(synopsis):
+    blob = storage.encode(synopsis)
+    rng = np.random.default_rng(43)
+    cuts = list(range(13)) + sorted(
+        int(c) for c in rng.integers(13, len(blob), 24))
+    for cut in cuts:
+        _assert_rejected(blob[:cut])
+
+
+def test_corruption_garbage_tails_rejected(synopsis):
+    blob = storage.encode(synopsis)
+    rng = np.random.default_rng(44)
+    for n_tail in (1, 7, 64, 4096):
+        tail = rng.integers(0, 256, n_tail, dtype=np.uint8).tobytes()
+        _assert_rejected(blob + tail)
+    _assert_rejected(b"")
+    _assert_rejected(b"NOPE" + bytes(16))
+
+
+def test_corruption_legacy_truncation_rejected(synopsis):
+    # Legacy unframed streams have no CRC, but truncation still hits the
+    # bit-reader overrun guards instead of hanging or zero-padding.
+    import pytest
+    raw = storage.encode(synopsis, framed=False)
+    assert storage.decode(raw).n_rows == synopsis.n_rows
+    rng = np.random.default_rng(45)
+    for cut in sorted(int(c) for c in rng.integers(4, len(raw) - 1, 16)):
+        for vectorized in (True, False):
+            with pytest.raises(storage.IntegrityError):
+                storage.decode(raw[:cut], vectorized=vectorized)
+
+
+def test_framed_blob_info_reports_frame(synopsis):
+    framed = storage.encode(synopsis)
+    raw = storage.encode(synopsis, framed=False)
+    assert storage.blob_info(framed)["framed"] is True
+    assert storage.blob_info(raw)["framed"] is False
+    # The frame costs exactly 12 bytes; the payload is unchanged.
+    assert len(framed) == len(raw) + 12
+    assert framed[12:] == raw

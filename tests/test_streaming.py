@@ -77,6 +77,95 @@ def test_streaming_admission_close_drains_pending():
         adm.submit("z")
 
 
+def test_worker_survives_raising_execute_cb():
+    """Regression: an exception escaping execute_cb must not kill the drain
+    worker. Pre-fix the first raising wave ended the daemon thread and every
+    later submission sat in the queue forever; now the guard routes the
+    error to error_cb and the SAME worker keeps draining."""
+    errors = []
+    seen = []
+
+    def execute(batch, stats):
+        if "poison" in batch:
+            raise RuntimeError("boom")
+        seen.extend(batch)
+
+    adm = StreamingAdmission(execute, max_wait_ms=5.0, max_batch=1,
+                             error_cb=lambda batch, exc: errors.append(
+                                 (list(batch), exc)))
+    adm.submit("poison")
+    adm.flush()
+    deadline = time.perf_counter() + TIMEOUT
+    while not errors and time.perf_counter() < deadline:
+        time.sleep(0.005)
+    assert errors and errors[0][0] == ["poison"]
+    assert isinstance(errors[0][1], RuntimeError)
+    # The worker survived: later submissions still execute, with no restart.
+    adm.submit("after")
+    adm.flush()
+    deadline = time.perf_counter() + TIMEOUT
+    while "after" not in seen and time.perf_counter() < deadline:
+        time.sleep(0.005)
+    assert seen == ["after"]
+    assert adm.restarts == 0
+    adm.close()
+
+
+def test_raising_error_cb_does_not_kill_worker():
+    """The supervision callback itself is untrusted: if error_cb raises,
+    the worker still survives and keeps draining."""
+    seen = []
+
+    def execute(batch, stats):
+        if "poison" in batch:
+            raise RuntimeError("boom")
+        seen.extend(batch)
+
+    def bad_error_cb(batch, exc):
+        raise ValueError("error_cb is broken too")
+
+    adm = StreamingAdmission(execute, max_wait_ms=5.0, max_batch=1,
+                             error_cb=bad_error_cb)
+    adm.submit("poison")
+    adm.submit("after")
+    adm.flush()
+    deadline = time.perf_counter() + TIMEOUT
+    while "after" not in seen and time.perf_counter() < deadline:
+        time.sleep(0.005)
+    assert seen == ["after"]
+    assert adm.restarts == 0
+    adm.close()
+
+
+def test_watchdog_respawns_dead_worker():
+    """If the worker thread dies outside the guarded paths, the next
+    submit notices (is_alive() false), bumps ``restarts`` and respawns —
+    queued items are never stranded."""
+    seen = []
+    adm = StreamingAdmission(lambda batch, stats: seen.extend(batch),
+                             max_wait_ms=5.0, max_batch=1)
+    adm.submit("first")
+    adm.flush()
+    deadline = time.perf_counter() + TIMEOUT
+    while "first" not in seen and time.perf_counter() < deadline:
+        time.sleep(0.005)
+    # Simulate a hard worker death the guards never saw.
+    with adm._cv:
+        adm._stop = True
+        adm._cv.notify_all()
+    adm._thread.join(timeout=TIMEOUT)
+    assert not adm._thread.is_alive()
+    adm._stop = False
+    adm.submit("second")                      # watchdog respawns here
+    adm.flush()
+    deadline = time.perf_counter() + TIMEOUT
+    while "second" not in seen and time.perf_counter() < deadline:
+        time.sleep(0.005)
+    assert seen == ["first", "second"]
+    assert adm.restarts == 1
+    adm.close()
+
+
 def test_max_wait_timeout_fires_partial_group(framework):
     """A partial group (size < max_batch) executes once the oldest
     submission has waited max_wait_ms — no flush, no full batch."""
